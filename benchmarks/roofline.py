@@ -1,0 +1,178 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Reads runs/dryrun/*.json (written by repro.launch.dryrun), computes the
+three roofline terms per (arch x shape) cell on the single-pod mesh, the
+MODEL_FLOPS/HLO_FLOPS usefulness ratio, and emits the §Roofline table
+(markdown + CSV).
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir runs/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+sys.path.insert(0, "src")
+
+from repro.configs import SHAPES, get_config, get_shape  # noqa: E402
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+N_CHIPS = 256
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6*N*D (train) / 2*N*D (forward) with N = active params (MoE-aware).
+
+    D = processed tokens per step; decode steps process one token per
+    sequence.  Embedding params excluded (negligible matmul FLOPs)."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    total, active = cfg.param_counts()
+    n = active
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: 1 new token per sequence
+
+
+def ideal_memory_seconds(arch: str, shape_name: str) -> float:
+    """Analytic HBM-traffic floor per device / HBM bandwidth.
+
+    decode: stream the (active) weights + the KV cache once per token.
+    train/prefill: weights 3x (fwd read, bwd read, optimizer update) +
+    ~12 residual-stream accesses per token per layer (flash-style
+    accounting; attention/MLP intermediates stay on-chip)."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    total, active = cfg.param_counts()
+    p_local = 2.0 * total / N_CHIPS          # bf16 weights per device
+    if shape.kind == "decode":
+        cache = _cache_bytes(cfg, shape) / N_CHIPS
+        act_w = 2.0 * active / N_CHIPS       # only active experts stream
+        return (act_w + cache) / HBM_BW
+    toks_local = shape.global_batch * shape.seq_len / N_CHIPS
+    act = 12.0 * toks_local * cfg.d_model * cfg.n_layers * 2.0
+    passes = 3.0 if shape.kind == "train" else 1.0
+    return (passes * p_local + act) / HBM_BW
+
+
+def _cache_bytes(cfg, shape) -> float:
+    b, s = shape.global_batch, shape.seq_len
+    per_layer = 0.0
+    for i in range(cfg.n_layers):
+        kind = cfg.layer_kind(i)
+        if kind == "a":
+            per_layer += 2 * b * s * cfg.n_kv_heads * cfg.head_dim * 2
+        elif kind == "l":
+            per_layer += b * s * (cfg.mla.kv_lora_rank
+                                  + cfg.mla.qk_rope_head_dim) * 2
+        elif kind == "m":
+            di = cfg.mamba.inner(cfg.d_model)
+            per_layer += b * di * (cfg.mamba.d_state * 4 + 3 * 2)
+        elif kind == "r":
+            h = cfg.rwkv.n_heads(cfg.d_model)
+            per_layer += b * h * cfg.rwkv.head_dim ** 2 * 4
+    return per_layer
+
+
+def what_would_help(rec: Dict) -> str:
+    b = rec["bottleneck"]
+    if b == "compute":
+        return ("near compute roofline; larger per-chip batch or lower-"
+                "precision matmuls are the only levers")
+    if b == "memory":
+        return ("HBM-bound: fuse/remat to cut activation traffic, or "
+                "bigger tiles to raise arithmetic intensity")
+    return ("collective-bound: shrink cross-device bytes (hierarchical "
+            "reduce, int8 compression) or overlap with compute")
+
+
+def load_cells(dir_: str, mesh: str = "16x16") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok" or rec.get("mesh") != mesh:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def build_table(cells: List[Dict]) -> List[Dict]:
+    rows = []
+    for rec in cells:
+        mf = model_flops(rec["arch"], rec["shape"])
+        hlo_total = rec["flops_per_device"] * rec["n_devices"]
+        useful = mf / hlo_total if hlo_total else 0.0
+        t_dom = max(rec["t_compute"], rec["t_memory"], rec["t_collective"])
+        # roofline fraction: the analytically-unavoidable time (compute OR
+        # memory floor, whichever binds) over the dominant measured term
+        ideal = max(mf / (rec["n_devices"] * PEAK_FLOPS),
+                    ideal_memory_seconds(rec["arch"], rec["shape"]))
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"],
+            "t_compute": rec["t_compute"], "t_memory": rec["t_memory"],
+            "t_collective": rec["t_collective"],
+            "bottleneck": rec["bottleneck"],
+            "model_flops": mf, "hlo_flops_total": hlo_total,
+            "useful_ratio": useful,
+            "roofline_fraction": ideal / t_dom if t_dom else 0.0,
+            "peak_gb": rec["memory"]["peak_bytes"] / 1e9,
+            "hint": what_would_help(rec),
+        })
+    return rows
+
+
+def print_markdown(rows: List[Dict]) -> None:
+    print("| arch | shape | compute s | memory s | collective s | bound | "
+          "MODEL/HLO | roofline frac | peak GB |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['arch']} | {r['shape']} | {r['t_compute']:.2e} | "
+              f"{r['t_memory']:.2e} | {r['t_collective']:.2e} | "
+              f"{r['bottleneck']} | {r['useful_ratio']:.2f} | "
+              f"{r['roofline_fraction']:.2%} | {r['peak_gb']:.1f} |")
+
+
+def print_csv(rows: List[Dict]) -> None:
+    print("arch,shape,t_compute,t_memory,t_collective,bottleneck,"
+          "useful_ratio,roofline_fraction,peak_gb")
+    for r in rows:
+        print(f"{r['arch']},{r['shape']},{r['t_compute']:.4e},"
+              f"{r['t_memory']:.4e},{r['t_collective']:.4e},"
+              f"{r['bottleneck']},{r['useful_ratio']:.3f},"
+              f"{r['roofline_fraction']:.4f},{r['peak_gb']:.2f}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="runs/dryrun")
+    ap.add_argument("--format", choices=["markdown", "csv"],
+                    default="markdown")
+    args = ap.parse_args()
+    cells = load_cells(args.dir)
+    if not cells:
+        print(f"no dry-run artifacts in {args.dir}; run "
+              f"`python -m repro.launch.dryrun --all` first",
+              file=sys.stderr)
+        return 1
+    rows = build_table(cells)
+    if args.format == "csv":
+        print_csv(rows)
+    else:
+        print_markdown(rows)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,78 @@
+"""Serving example: batched prefill + decode with the KV cache paths.
+
+Runs a reduced model end-to-end: prefill a batch of prompts, then decode
+greedily — the same serve_step the decode_32k/long_500k dry-run cells
+lower at production shapes.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch rwkv6-1.6b
+"""
+
+import argparse
+import sys
+sys.path.insert(0, "src")
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models.api import text_len
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    rng = np.random.default_rng(0)
+    max_len = args.prompt_len + args.new_tokens
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+
+    decode = jax.jit(model.decode_step)
+    cache = model.init_cache(args.batch, max_len)
+    if cfg.encoder is not None:
+        batch = {"tokens": jnp.asarray(prompts),
+                 "frontend_embeds": jnp.asarray(
+                     rng.normal(size=(args.batch, cfg.encoder.n_frames,
+                                      cfg.d_model)), jnp.bfloat16)}
+        _, pre_cache = model.prefill(params, batch)
+        cache["cross_kv"] = pre_cache["cross_kv"]
+
+    # teacher-forced prefill via decode steps (exercises the cache path),
+    # then greedy generation
+    t0 = time.time()
+    tok = jnp.asarray(prompts[:, :1])
+    out_tokens = [np.asarray(tok)]
+    for pos in range(max_len - 1):
+        logits, cache = decode(params, cache, tok,
+                               jnp.asarray(pos, jnp.int32))
+        if pos + 1 < args.prompt_len:
+            tok = jnp.asarray(prompts[:, pos + 1: pos + 2])
+        else:
+            tok = jnp.argmax(logits, -1, keepdims=True).astype(jnp.int32)
+        out_tokens.append(np.asarray(tok))
+    dt = time.time() - t0
+
+    gen = np.concatenate(out_tokens, axis=1)
+    print(f"arch={cfg.name}  batch={args.batch}  "
+          f"{max_len-1} steps in {dt:.1f}s "
+          f"({(max_len-1)*args.batch/dt:.1f} tok/s on CPU)")
+    for b in range(args.batch):
+        print(f"  seq{b}: prompt={gen[b,:args.prompt_len].tolist()} "
+              f"-> generated={gen[b, args.prompt_len:].tolist()}")
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,217 @@
+"""In-network aggregation (paper §5.2, Alg. 3).
+
+Given the committed order O(U), partition updates into ``k+1`` groups:
+group 0 streams directly to the server; each group ``i >= 1`` is summed at a
+pre-assigned aggregator and only the aggregate travels to the server.  The
+partition is chosen by exhaustively enumerating the ``|U|+1`` split points
+``n`` (size of the direct group) and greedily growing aggregator groups under
+the paper's *efficiency constraint*: aggregating all of group ``i`` must not
+finish later than the time at which groups ``0..i-1`` have fully arrived at
+the server — the server NIC is never left fallow.
+
+The best pattern minimizes the makespan (time until the last aggregate
+arrives at the server; the paper's Alg. 3 objective).  For asynchronous mode
+the average commit time (eq. 17) is also reported.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .network import NetworkState, Transfer
+from .ordering import Update
+
+DIRECT = 0  # aggregator id 0 == "forward straight to the server"
+
+
+@dataclass
+class AggGroup:
+    """One group of the partition: its members and concrete transfers."""
+
+    aggregator: Optional[str]          # None for the direct group
+    members: List[Update] = field(default_factory=list)
+    member_transfers: List[Transfer] = field(default_factory=list)
+    aggregate_transfer: Optional[Transfer] = None  # aggregator -> server
+
+    @property
+    def t_commit(self) -> float:
+        """Time the group's contribution is fully applied at the server."""
+        if self.aggregate_transfer is not None:
+            return self.aggregate_transfer.t_end
+        if not self.member_transfers:
+            return 0.0
+        return max(t.t_end for t in self.member_transfers)
+
+
+@dataclass
+class AggregationResult:
+    groups: List[AggGroup]
+    assignment: Dict[int, int]          # update uid -> group index (0 = direct)
+    makespan: float
+    network: NetworkState
+    # commit time of each update at the server (direct: its own transfer end;
+    # aggregated: the group aggregate's arrival) keyed by uid:
+    commit_times: Dict[int, float] = field(default_factory=dict)
+
+    @property
+    def avg_commit(self) -> float:
+        if not self.commit_times:
+            return 0.0
+        return sum(self.commit_times.values()) / len(self.commit_times)
+
+    @property
+    def n_direct(self) -> int:
+        return len(self.groups[0].members) if self.groups else 0
+
+
+def _evaluate_case(n: int, order: Sequence[Update], network: NetworkState,
+                   server: str, aggregators: Sequence[str],
+                   t_now: float) -> Optional[AggregationResult]:
+    """One case of Alg. 3: first ``n`` updates direct, rest greedily grouped."""
+    nw = network.copy()
+    direct = AggGroup(aggregator=None)
+    groups: List[AggGroup] = [direct]
+    assignment: Dict[int, int] = {}
+    commit_times: Dict[int, float] = {}
+
+    # (1) first n updates straight to the server (Alg. 3 lines 3-7)
+    t_max = t_now
+    for g in order[:n]:
+        tr = nw.reserve(g.worker, server, g.size, max(g.t_avail, t_now))
+        direct.members.append(g)
+        direct.member_transfers.append(tr)
+        assignment[g.uid] = DIRECT
+        commit_times[g.uid] = tr.t_end
+        t_max = tr.t_end  # server is busy receiving until the last direct one
+
+    # (2) greedily pack the remaining updates into aggregator groups
+    aid = 0                      # index into `aggregators`
+    current: Optional[AggGroup] = None
+
+    def close_group(grp: AggGroup) -> float:
+        """Reserve the aggregate->server transfer; return its arrival time."""
+        agg_size = max(m.size for m in grp.members)  # sum keeps tensor size
+        t_ready = max(t.t_end for t in grp.member_transfers)
+        tr = nw.reserve(grp.aggregator, server, agg_size, t_ready)
+        grp.aggregate_transfer = tr
+        for m in grp.members:
+            commit_times[m.uid] = tr.t_end
+        return tr.t_end
+
+    i = n
+    while i < len(order):
+        g = order[i]
+        if current is None:
+            if aid >= len(aggregators):
+                return None  # out of aggregators -> case infeasible
+            current = AggGroup(aggregator=aggregators[aid])
+            groups.append(current)
+            aid += 1
+        t_en = nw.transfer_time(g.worker, current.aggregator, g.size,
+                                max(g.t_avail, t_now))
+        if current.members and t_en > t_max:
+            # Efficiency constraint violated (Alg. 3 lines 10-15): close the
+            # current group and retry this update with the next aggregator.
+            t_max = close_group(current)
+            current = None
+            continue
+        tr = nw.reserve(g.worker, current.aggregator, g.size,
+                        max(g.t_avail, t_now))
+        current.members.append(g)
+        current.member_transfers.append(tr)
+        assignment[g.uid] = len(groups) - 1
+        i += 1
+
+    if current is not None and current.members:
+        t_max = close_group(current)
+
+    makespan = max(commit_times.values(), default=t_now)
+    return AggregationResult(groups=groups, assignment=assignment,
+                             makespan=makespan, network=nw,
+                             commit_times=commit_times)
+
+
+def aggregate_updates(order: Sequence[Update], network: NetworkState,
+                      server: str, aggregators: Sequence[str], *,
+                      t_now: float = 0.0,
+                      objective: str = "makespan") -> AggregationResult:
+    """Alg. 3: enumerate all ``|U|+1`` direct-group sizes, keep the best.
+
+    ``objective``: ``"makespan"`` (sync, eq. 16) or ``"avg_commit"`` (async,
+    eq. 17).  The input ``network`` is *not* mutated; the chosen case's
+    mutated copy is returned in the result.
+    """
+    order = list(order)
+    if not order:
+        return AggregationResult(groups=[AggGroup(aggregator=None)], assignment={},
+                                 makespan=t_now, network=network.copy())
+    best: Optional[AggregationResult] = None
+    for n in range(len(order) + 1):
+        res = _evaluate_case(n, order, network, server, aggregators, t_now)
+        if res is None:
+            continue
+        key = res.makespan if objective == "makespan" else res.avg_commit
+        best_key = (best.makespan if objective == "makespan" else best.avg_commit) \
+            if best is not None else float("inf")
+        if key < best_key - 1e-12:
+            best = res
+    assert best is not None, "n == |U| (all-direct) is always feasible"
+    return best
+
+
+def plan_distribution(model_size: float, requesters: Sequence[str],
+                      network: NetworkState, server: str,
+                      distributors: Sequence[str], *,
+                      t_now: float = 0.0) -> Dict[str, float]:
+    """Model distribution tree (paper §10.3).
+
+    Batched pull requests are served with the same model version through
+    ``k`` distributors, mirroring Alg. 3 with transfer times replaced by
+    server->distributor and distributor->worker times.  The server sends the
+    model to the *last* distributor first and proceeds backwards, while the
+    first group of workers reads directly from the server.
+
+    Returns the time each requester receives the model.
+    """
+    recv_time: Dict[str, float] = {}
+    best: Optional[Dict[str, float]] = None
+    for n in range(len(requesters) + 1):
+        nw = network.copy()
+        times: Dict[str, float] = {}
+        t_max = t_now
+        feasible = True
+        # direct group
+        for w in requesters[:n]:
+            tr = nw.reserve(server, w, model_size, t_now)
+            times[w] = tr.t_end
+            t_max = tr.t_end
+        # distributor groups (greedy, same efficiency constraint)
+        rest = list(requesters[n:])
+        aid = 0
+        while rest:
+            if aid >= len(distributors):
+                feasible = False
+                break
+            dist = distributors[aid]
+            d_tr = nw.reserve(server, dist, model_size, t_now)
+            group: List[str] = []
+            while rest:
+                w = rest[0]
+                t_en = nw.transfer_time(dist, w, model_size, d_tr.t_end)
+                if group and t_en > t_max:
+                    break
+                tr = nw.reserve(dist, w, model_size, d_tr.t_end)
+                times[w] = tr.t_end
+                group.append(w)
+                rest.pop(0)
+            if group:
+                t_max = max(t_max, max(times[w] for w in group))
+            aid += 1
+        if not feasible:
+            continue
+        makespan = max(times.values(), default=t_now)
+        if best is None or makespan < max(best.values(), default=float("inf")):
+            best = times
+    assert best is not None
+    return best

@@ -1,0 +1,221 @@
+"""State-of-the-art baselines the paper compares against (§7 "Algorithms").
+
+* ``FairShareAsync`` — vanilla PS async: all pending pushes share links
+  max-min fairly (Fig. 1(a) "network bandwidth is shared"), the server
+  applies updates in transfer-completion order.
+* ``ring_allreduce_time`` / ``tree_allreduce_time`` — RR-Sync / Tr-Sync
+  per-iteration communication models under time-varying bandwidth.
+* ``SyncSim`` — synchronous SGD driver: iteration time = slowest compute +
+  AllReduce time (ring or tree), with straggler/bandwidth sampling matching
+  ``ClusterSim`` settings.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .delay import DelayTracker
+from .network import gbps
+from .simulator import BandwidthModel, CommitRecord, N_STATIC, SimResult, StragglerModel, C1
+
+
+# --------------------------------------------------------------------------- #
+# max-min fair sharing (progressive filling) for the vanilla-async baseline
+# --------------------------------------------------------------------------- #
+def max_min_rates(flows: Sequence[Tuple[int, str, str]],
+                  up_cap: Dict[str, float],
+                  down_cap: Dict[str, float]) -> Dict[int, float]:
+    """Max-min fair rates for flows (id, src, dst) over host up/down links."""
+    rates: Dict[int, float] = {}
+    active = {fid: (s, d) for fid, s, d in flows}
+    cap: Dict[Tuple[str, str], float] = {}
+    members: Dict[Tuple[str, str], set] = {}
+    for fid, (s, d) in active.items():
+        for link in (("up", s), ("down", d)):
+            cap.setdefault(link, up_cap[s] if link[0] == "up" else down_cap[d])
+            members.setdefault(link, set()).add(fid)
+    while active:
+        # link with the smallest equal share
+        best_link, best_share = None, math.inf
+        for link, fids in members.items():
+            live = fids & active.keys()
+            if not live:
+                continue
+            share = cap[link] / len(live)
+            if share < best_share:
+                best_link, best_share = link, share
+        if best_link is None:
+            break
+        for fid in list(members[best_link] & active.keys()):
+            rates[fid] = best_share
+            s, d = active.pop(fid)
+            for link in (("up", s), ("down", d)):
+                cap[link] -= best_share
+        cap[best_link] = 0.0
+    return rates
+
+
+class FairShareAsync:
+    """Vanilla PS-async simulator: concurrent fair-shared pushes (Fig. 1a)."""
+
+    def __init__(self, n_workers: int, server: str = "server", *,
+                 update_size: float, compute_time: float = 0.1,
+                 straggler: StragglerModel = C1,
+                 bandwidth: BandwidthModel = N_STATIC,
+                 default_bw: float = gbps(10), seed: int = 0):
+        self.workers = [f"worker{i}" for i in range(n_workers)]
+        self.server = server
+        self.update_size = update_size
+        self.compute_time = compute_time
+        self.straggler = straggler
+        self.bandwidth = bandwidth
+        self.rng = random.Random(seed)
+        self.up = {h: default_bw for h in self.workers + [server]}
+        self.down = dict(self.up)
+        self.result = SimResult()
+        self._uid = itertools.count()
+
+    def run(self, *, until_time: float = math.inf,
+            until_commits: int = 10 ** 9) -> SimResult:
+        t = 0.0
+        next_bw = self.bandwidth.period
+        # flow state: fid -> [remaining_bytes, worker, version_used]
+        flows: Dict[int, List] = {}
+        compute_done: List[Tuple[float, str]] = []
+        for w in self.workers:
+            heapq.heappush(compute_done,
+                           (self.compute_time * self.straggler.sample(self.rng), w))
+        v_server = 0
+
+        while t < until_time and self.result.n_commits < until_commits:
+            rates = max_min_rates([(fid, f[1], self.server)
+                                   for fid, f in flows.items()],
+                                  self.up, self.down)
+            # next event: flow completion, compute done, or bandwidth change
+            t_flow, fid_done = math.inf, None
+            for fid, f in flows.items():
+                r = rates.get(fid, 0.0)
+                if r > 0:
+                    eta = t + f[0] / r
+                    if eta < t_flow:
+                        t_flow, fid_done = eta, fid
+            t_comp = compute_done[0][0] if compute_done else math.inf
+            t_next = min(t_flow, t_comp, next_bw, until_time)
+            # progress all flows to t_next
+            for fid, f in flows.items():
+                f[0] -= rates.get(fid, 0.0) * (t_next - t)
+            t = t_next
+            if t >= until_time:
+                break
+            if t == t_flow and fid_done is not None:
+                _, w, v_used = flows.pop(fid_done)
+                rec = CommitRecord(time=t, worker=w, uid=fid_done,
+                                   version_used=v_used,
+                                   version_committed=v_server, aggregated=False)
+                v_server += 1
+                self.result.commits.append(rec)
+                self.result.delay.record(rec.delay)
+                self.result.bytes_to_server += self.update_size
+                heapq.heappush(compute_done,
+                               (t + self.compute_time * self.straggler.sample(self.rng), w))
+            elif t == t_comp:
+                _, w = heapq.heappop(compute_done)
+                flows[next(self._uid)] = [self.update_size, w, v_server]
+            elif t == next_bw:
+                for h in self.workers:
+                    self.up[h] = self.bandwidth.sample(self.rng)
+                    self.down[h] = self.bandwidth.sample(self.rng)
+                next_bw += self.bandwidth.period
+        self.result.sim_time = t
+        return self.result
+
+
+# --------------------------------------------------------------------------- #
+# synchronous AllReduce models
+# --------------------------------------------------------------------------- #
+def ring_allreduce_time(size: float, bws: Sequence[float]) -> float:
+    """Bandwidth-optimal ring: 2(N-1) steps of ``size/N`` at the slowest link.
+
+    ``bws``: effective per-worker link bandwidth (min of up/down) this
+    iteration.  The ring step rate is set by the slowest participant.
+    """
+    n = len(bws)
+    if n <= 1:
+        return 0.0
+    return 2.0 * (n - 1) * (size / n) / min(bws)
+
+
+def tree_allreduce_time(size: float, bws: Sequence[float],
+                        seed: int = 0) -> float:
+    """Binary-tree AllReduce: log2(N) aggregation rounds + log2(N) broadcast
+    rounds; each round ships the full update, paced by the slowest pair."""
+    n = len(bws)
+    if n <= 1:
+        return 0.0
+    rng = random.Random(seed)
+    order = list(range(n))
+    rng.shuffle(order)
+    total = 0.0
+    level = order
+    while len(level) > 1:
+        pair_bws = [min(bws[level[i]], bws[level[i + 1]])
+                    for i in range(0, len(level) - 1, 2)]
+        total += size / min(pair_bws)
+        level = level[::2]
+    return 2.0 * total  # reduce + broadcast
+
+
+@dataclass
+class SyncResult:
+    iteration_times: List[float] = field(default_factory=list)
+
+    @property
+    def total_time(self) -> float:
+        return sum(self.iteration_times)
+
+    @property
+    def mean_iteration(self) -> float:
+        return self.total_time / len(self.iteration_times) if self.iteration_times else 0.0
+
+
+class SyncSim:
+    """RR-Sync / Tr-Sync driver under straggler + bandwidth settings."""
+
+    def __init__(self, n_workers: int, *, update_size: float,
+                 compute_time: float = 0.1, straggler: StragglerModel = C1,
+                 bandwidth: BandwidthModel = N_STATIC,
+                 default_bw: float = gbps(10), variant: str = "ring",
+                 seed: int = 0):
+        self.n = n_workers
+        self.update_size = update_size
+        self.compute_time = compute_time
+        self.straggler = straggler
+        self.bandwidth = bandwidth
+        self.default_bw = default_bw
+        self.variant = variant
+        self.rng = random.Random(seed)
+
+    def run(self, n_iterations: int) -> SyncResult:
+        res = SyncResult()
+        t = 0.0
+        bws = [self.default_bw] * self.n
+        next_bw = self.bandwidth.period
+        for it in range(n_iterations):
+            comp = max(self.compute_time * self.straggler.sample(self.rng)
+                       for _ in range(self.n))
+            if self.variant == "ring":
+                comm = ring_allreduce_time(self.update_size, bws)
+            else:
+                comm = tree_allreduce_time(self.update_size, bws, seed=it)
+            t += comp + comm
+            res.iteration_times.append(comp + comm)
+            while t >= next_bw:
+                bws = [min(self.bandwidth.sample(self.rng),
+                           self.bandwidth.sample(self.rng)) for _ in range(self.n)]
+                next_bw += self.bandwidth.period
+        return res

@@ -1,0 +1,330 @@
+"""Time-varying network model with per-transfer bandwidth reservation.
+
+This is the substrate the MLfabric scheduler (paper §5) reasons over.  Every
+host has an independent *uplink* and *downlink* (the paper treats incoming
+and outgoing links independently, §7) connected through a congestion-free
+core (the paper's evaluation assumption).  Residual capacity of a link is a
+piecewise-constant function of time; reserving a transfer consumes the
+bottleneck residual bandwidth along its path, exactly as in Fig. 4(b)/(c).
+
+Units: bytes and bytes/second.  Helpers for Gbps / MB are at module bottom.
+"""
+
+from __future__ import annotations
+
+import bisect
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+
+INF = math.inf
+_EPS = 1e-9
+
+
+class Timeline:
+    """A piecewise-constant, non-negative rate function over ``[0, inf)``.
+
+    Stored as parallel lists of breakpoint times and the rate that holds from
+    each breakpoint until the next (the last rate extends to infinity).
+    """
+
+    __slots__ = ("times", "rates")
+
+    def __init__(self, rate: float = 0.0):
+        self.times: List[float] = [0.0]
+        self.rates: List[float] = [float(rate)]
+
+    # ------------------------------------------------------------------ #
+    # construction / copying
+    # ------------------------------------------------------------------ #
+    def copy(self) -> "Timeline":
+        t = Timeline.__new__(Timeline)
+        t.times = list(self.times)
+        t.rates = list(self.rates)
+        return t
+
+    @classmethod
+    def from_segments(cls, segments: Iterable[Tuple[float, float]]) -> "Timeline":
+        """Build from ``(start_time, rate)`` pairs; rate holds until next."""
+        tl = cls(0.0)
+        for t, r in segments:
+            tl.set_rate_from(t, r)
+        return tl
+
+    # ------------------------------------------------------------------ #
+    # queries
+    # ------------------------------------------------------------------ #
+    def _idx(self, t: float) -> int:
+        """Index of the segment that contains time ``t``."""
+        return bisect.bisect_right(self.times, t) - 1
+
+    def rate_at(self, t: float) -> float:
+        return self.rates[self._idx(t)]
+
+    def segments(self, t_from: float = 0.0) -> Iterator[Tuple[float, float, float]]:
+        """Yield ``(t0, t1, rate)``; the final segment has ``t1 == inf``."""
+        i = self._idx(t_from)
+        n = len(self.times)
+        while i < n:
+            t0 = max(self.times[i], t_from)
+            t1 = self.times[i + 1] if i + 1 < n else INF
+            yield (t0, t1, self.rates[i])
+            i += 1
+
+    def integrate(self, t0: float, t1: float) -> float:
+        """Total capacity (bytes) available in ``[t0, t1]``."""
+        total = 0.0
+        for s0, s1, r in self.segments(t0):
+            if s0 >= t1:
+                break
+            total += r * (min(s1, t1) - s0)
+        return total
+
+    def time_to_consume(self, t_start: float, size: float) -> float:
+        """Earliest ``t`` such that ``integrate(t_start, t) >= size``.
+
+        Returns ``inf`` when the timeline can never deliver ``size`` bytes.
+        """
+        if size <= 0:
+            return t_start
+        remaining = size
+        for t0, t1, r in self.segments(t_start):
+            if r > _EPS:
+                dur = t1 - t0
+                cap = r * dur
+                if cap >= remaining - _EPS:
+                    return t0 + remaining / r
+                remaining -= cap
+        return INF
+
+    # ------------------------------------------------------------------ #
+    # mutation
+    # ------------------------------------------------------------------ #
+    def _ensure_breakpoint(self, t: float) -> int:
+        """Insert a breakpoint at ``t`` (if absent); return its index."""
+        i = self._idx(t)
+        if self.times[i] == t:
+            return i
+        self.times.insert(i + 1, t)
+        self.rates.insert(i + 1, self.rates[i])
+        return i + 1
+
+    def set_rate_from(self, t: float, rate: float) -> None:
+        """Set the rate to ``rate`` for all times ``>= t``."""
+        i = self._ensure_breakpoint(t)
+        del self.times[i + 1:]
+        del self.rates[i + 1:]
+        self.rates[i] = float(rate)
+        self._coalesce()
+
+    def add(self, t0: float, t1: float, delta: float) -> None:
+        """Add ``delta`` to the rate over ``[t0, t1)`` (negative = reserve)."""
+        if t1 <= t0:
+            return
+        i = self._ensure_breakpoint(t0)
+        if t1 != INF:
+            j = self._ensure_breakpoint(t1)
+        else:
+            j = len(self.times)
+        for k in range(i, j):
+            r = self.rates[k] + delta
+            if r < 0:
+                if r < -1e-3:  # genuine over-subscription, not fp noise
+                    raise ValueError(
+                        f"over-reserved link: rate {self.rates[k]} + {delta} < 0 "
+                        f"at t={self.times[k]}"
+                    )
+                r = 0.0
+            self.rates[k] = r
+        self._coalesce()
+
+    def subtract_profile(self, profile: "Profile") -> None:
+        for t0, t1, r in profile.chunks:
+            self.add(t0, t1, -r)
+
+    def add_profile(self, profile: "Profile") -> None:
+        for t0, t1, r in profile.chunks:
+            self.add(t0, t1, r)
+
+    def _coalesce(self) -> None:
+        """Merge adjacent segments with (numerically) equal rates."""
+        nt, nr = [self.times[0]], [self.rates[0]]
+        for t, r in zip(self.times[1:], self.rates[1:]):
+            if abs(r - nr[-1]) > _EPS:
+                nt.append(t)
+                nr.append(r)
+        self.times, self.rates = nt, nr
+
+    # ------------------------------------------------------------------ #
+    # combination
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def minimum(timelines: Sequence["Timeline"]) -> "Timeline":
+        """Piecewise minimum of several timelines (path bottleneck, Fig 4b)."""
+        assert timelines
+        if len(timelines) == 1:
+            return timelines[0].copy()
+        breakpoints = sorted(set(itertools.chain(*(t.times for t in timelines))))
+        out = Timeline(0.0)
+        out.times = breakpoints
+        out.rates = [min(tl.rate_at(t) for tl in timelines) for t in breakpoints]
+        out._coalesce()
+        return out
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        segs = ", ".join(f"[{t:.3g}:{r:.3g}]" for t, r in zip(self.times, self.rates))
+        return f"Timeline({segs})"
+
+
+@dataclass
+class Profile:
+    """A concrete bandwidth usage profile: list of ``(t0, t1, rate)`` chunks."""
+
+    chunks: List[Tuple[float, float, float]] = field(default_factory=list)
+
+    @property
+    def t_start(self) -> float:
+        return self.chunks[0][0] if self.chunks else INF
+
+    @property
+    def t_end(self) -> float:
+        return self.chunks[-1][1] if self.chunks else INF
+
+    @property
+    def size(self) -> float:
+        return sum((t1 - t0) * r for t0, t1, r in self.chunks)
+
+
+def make_profile(residual: Timeline, t_avail: float, size: float) -> Optional[Profile]:
+    """Greedy maximal-rate transfer profile over ``residual`` (Fig. 4(b)).
+
+    The transfer uses the full bottleneck residual bandwidth at every instant
+    from ``t_avail`` until ``size`` bytes have moved.  Returns ``None`` if the
+    residual can never carry ``size`` bytes.
+    """
+    if size <= 0:
+        return Profile([(t_avail, t_avail, 0.0)])
+    chunks: List[Tuple[float, float, float]] = []
+    remaining = size
+    for t0, t1, r in residual.segments(t_avail):
+        if r <= _EPS:
+            continue
+        cap = r * (t1 - t0)
+        if cap >= remaining - _EPS:
+            chunks.append((t0, t0 + remaining / r, r))
+            return Profile(chunks)
+        chunks.append((t0, t1, r))
+        remaining -= cap
+    return None
+
+
+# --------------------------------------------------------------------------- #
+# network state
+# --------------------------------------------------------------------------- #
+@dataclass
+class Transfer:
+    """A scheduled transfer with the reserved per-link usage profile."""
+
+    uid: int
+    src: str
+    dst: str
+    size: float
+    t_avail: float
+    profile: Profile
+
+    @property
+    def t_start(self) -> float:
+        return self.profile.t_start
+
+    @property
+    def t_end(self) -> float:
+        return self.profile.t_end
+
+
+class NetworkState:
+    """Hosts with independent up/down links and a congestion-free core.
+
+    ``reserve`` mutates residual capacity; ``transfer_time`` is a pure query.
+    ``copy()`` is used by the scheduler's look-ahead (Alg. 2 line 8).
+    """
+
+    def __init__(self, hosts: Iterable[str], default_bw: float):
+        hosts = list(hosts)
+        self.up: Dict[str, Timeline] = {h: Timeline(default_bw) for h in hosts}
+        self.down: Dict[str, Timeline] = {h: Timeline(default_bw) for h in hosts}
+        self._uid = itertools.count()
+
+    # -- admin ----------------------------------------------------------- #
+    def add_host(self, host: str, bw: float) -> None:
+        self.up[host] = Timeline(bw)
+        self.down[host] = Timeline(bw)
+
+    def hosts(self) -> List[str]:
+        return list(self.up)
+
+    def copy(self) -> "NetworkState":
+        ns = NetworkState.__new__(NetworkState)
+        ns.up = {h: t.copy() for h, t in self.up.items()}
+        ns.down = {h: t.copy() for h, t in self.down.items()}
+        ns._uid = self._uid  # shared counter: uids stay unique across copies
+        return ns
+
+    def set_bandwidth(self, host: str, t: float, up: Optional[float] = None,
+                      down: Optional[float] = None) -> None:
+        """Change a host NIC's rate from time ``t`` on (paper's N settings)."""
+        if up is not None:
+            self.up[host].set_rate_from(t, up)
+        if down is not None:
+            self.down[host].set_rate_from(t, down)
+
+    # -- path model ------------------------------------------------------ #
+    def path(self, src: str, dst: str) -> List[Timeline]:
+        if src == dst:
+            return []
+        return [self.up[src], self.down[dst]]
+
+    def residual(self, src: str, dst: str) -> Timeline:
+        links = self.path(src, dst)
+        if not links:
+            return Timeline(INF)
+        return Timeline.minimum(links)
+
+    # -- queries ---------------------------------------------------------- #
+    def transfer_time(self, src: str, dst: str, size: float,
+                      t_avail: float) -> float:
+        """Completion time of a maximal-rate transfer; pure query (no reserve)."""
+        prof = make_profile(self.residual(src, dst), t_avail, size)
+        return prof.t_end if prof is not None else INF
+
+    # -- mutation ---------------------------------------------------------- #
+    def reserve(self, src: str, dst: str, size: float, t_avail: float) -> Transfer:
+        """Reserve bottleneck bandwidth for the transfer (Fig. 4(c))."""
+        prof = make_profile(self.residual(src, dst), t_avail, size)
+        if prof is None:
+            raise RuntimeError(f"transfer {src}->{dst} of {size}B can never finish")
+        for link in self.path(src, dst):
+            link.subtract_profile(prof)
+        return Transfer(next(self._uid), src, dst, size, t_avail, prof)
+
+    def release(self, transfer: Transfer) -> None:
+        """Undo a reservation (used by replication's lead-reduction, §5.3)."""
+        for link in self.path(transfer.src, transfer.dst):
+            link.add_profile(transfer.profile)
+
+
+# --------------------------------------------------------------------------- #
+# unit helpers
+# --------------------------------------------------------------------------- #
+def gbps(x: float) -> float:
+    """Gigabits/s -> bytes/s."""
+    return x * 1e9 / 8.0
+
+
+def mb(x: float) -> float:
+    """Megabytes -> bytes."""
+    return x * 1e6
+
+
+def seconds(x: float) -> float:
+    return x

@@ -1,0 +1,298 @@
+"""Discrete-event cluster simulator (paper §7 experiment harness).
+
+Reproduces the paper's evaluation environment: N workers with compute
+stragglers (settings C1-C3), per-host NIC bandwidth fluctuation (N1-N3), a
+monitor that reports bandwidth changes to the scheduler with a lag, a
+scheduler that batches push requests every ``batch_interval`` seconds, and a
+parameter server applying updates with momentum (eq. 2).
+
+Two fidelity modes share the same event loop:
+
+* **timing mode** (default): updates are metadata only; used by benchmarks
+  that reproduce the paper's timing tables.
+* **training mode**: the caller provides ``on_compute`` / ``on_commit``
+  callbacks that move real tensors (see ``repro/ps/async_trainer.py``); the
+  simulator decides *when/what order*, the trainer decides *values*.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from .delay import DelayTracker
+from .network import NetworkState, gbps, mb
+from .ordering import Update
+from .scheduler import BatchPlan, MLfabricScheduler, SchedulerConfig
+
+
+# --------------------------------------------------------------------------- #
+# workload models (paper §7 "Background compute and network load")
+# --------------------------------------------------------------------------- #
+@dataclass
+class StragglerModel:
+    """Each compute phase is slowed by ``factor`` with probability ``prob``."""
+
+    prob: float = 0.10
+    factor: float = 2.0
+
+    def sample(self, rng: random.Random) -> float:
+        return self.factor if rng.random() < self.prob else 1.0
+
+
+# Paper defaults: C1=(10%,2x), C2=(10%,4x), C3=(4%,2x)
+C1 = StragglerModel(0.10, 2.0)
+C2 = StragglerModel(0.10, 4.0)
+C3 = StragglerModel(0.04, 2.0)
+
+
+@dataclass
+class BandwidthModel:
+    """Every ``period`` seconds each NIC re-draws its rate from ``levels``."""
+
+    period: float = 5.0
+    levels: Sequence[float] = (gbps(1), gbps(2.5), gbps(3.3), gbps(5), gbps(10))
+    probs: Sequence[float] = (0.0, 0.0, 0.0, 0.1, 0.9)
+
+    def sample(self, rng: random.Random) -> float:
+        return rng.choices(list(self.levels), weights=list(self.probs))[0]
+
+
+N1 = BandwidthModel()
+N2 = BandwidthModel(probs=(0.0, 0.1, 0.1, 0.1, 0.7))
+N3 = BandwidthModel(probs=(0.5, 0.0, 0.0, 0.0, 0.5))
+N_STATIC = BandwidthModel(probs=(0.0, 0.0, 0.0, 0.0, 1.0))
+
+
+# --------------------------------------------------------------------------- #
+# simulation records
+# --------------------------------------------------------------------------- #
+@dataclass
+class CommitRecord:
+    time: float
+    worker: str
+    uid: int
+    version_used: int       # model version the gradient was computed from
+    version_committed: int  # model version right before this commit
+    aggregated: bool
+
+    @property
+    def delay(self) -> int:
+        return self.version_committed - self.version_used
+
+
+@dataclass
+class SimResult:
+    commits: List[CommitRecord] = field(default_factory=list)
+    drops: int = 0
+    sim_time: float = 0.0
+    delay: DelayTracker = field(default_factory=DelayTracker)
+    bytes_to_server: float = 0.0
+    bytes_to_replica: float = 0.0
+    replica_divergence_trace: List[Tuple[float, float]] = field(default_factory=list)
+    scheduler_batches: int = 0
+    scheduler_wall_time: float = 0.0
+
+    @property
+    def n_commits(self) -> int:
+        return len(self.commits)
+
+    @property
+    def commit_rate(self) -> float:
+        return self.n_commits / self.sim_time if self.sim_time > 0 else 0.0
+
+
+# --------------------------------------------------------------------------- #
+# the simulator
+# --------------------------------------------------------------------------- #
+class ClusterSim:
+    """Event-driven MLfabric cluster (PS mode).
+
+    Hosts: ``worker0..N-1``, ``server``, optional ``replica``; aggregators
+    are co-hosted with workers (paper §7) and named by their host.
+    """
+
+    def __init__(
+        self,
+        n_workers: int,
+        scheduler_config: SchedulerConfig,
+        *,
+        update_size: float = mb(100.0),
+        model_size: Optional[float] = None,
+        compute_time: float = 0.1,
+        straggler: StragglerModel = C1,
+        bandwidth: BandwidthModel = N_STATIC,
+        default_bw: float = gbps(10),
+        monitor_lag: float = 0.2,
+        seed: int = 0,
+        on_compute: Optional[Callable[[str, int], Tuple[float, float]]] = None,
+        on_commit: Optional[Callable[[CommitRecord], None]] = None,
+        on_drop: Optional[Callable[[str, int], None]] = None,
+    ):
+        self.n_workers = n_workers
+        self.workers = [f"worker{i}" for i in range(n_workers)]
+        self.cfg = scheduler_config
+        self.update_size = update_size
+        self.model_size = model_size if model_size is not None else update_size
+        self.compute_time = compute_time
+        self.straggler = straggler
+        self.bandwidth = bandwidth
+        self.monitor_lag = monitor_lag
+        self.rng = random.Random(seed)
+        self.on_compute = on_compute
+        self.on_commit = on_commit
+        self.on_drop = on_drop
+
+        hosts = list(self.workers) + [scheduler_config.server]
+        if scheduler_config.replica:
+            hosts.append(scheduler_config.replica)
+        self.net_actual = NetworkState(hosts, default_bw)
+        self.net_lagged = NetworkState(hosts, default_bw)
+
+        self.scheduler = MLfabricScheduler(scheduler_config)
+        self.result = SimResult()
+
+        self._uid = itertools.count()
+        self._eid = itertools.count()
+        self._events: List[Tuple[float, int, str, dict]] = []
+        self._pending: List[Update] = []      # push requests awaiting a batch
+        self._uid_meta: Dict[int, dict] = {}  # uid -> {worker, version}
+        self.v_server = 0                     # committed model version
+
+    # ------------------------------------------------------------------ #
+    def _push_event(self, t: float, kind: str, **payload) -> None:
+        heapq.heappush(self._events, (t, next(self._eid), kind, payload))
+
+    # ------------------------------------------------------------------ #
+    def run(self, *, until_time: float = math.inf,
+            until_commits: int = 10 ** 9) -> SimResult:
+        t = 0.0
+        # seed events: every worker starts computing; NIC fluctuations begin.
+        for w in self.workers:
+            self._schedule_compute(w, t)
+        if self.bandwidth.period < math.inf:
+            self._push_event(self.bandwidth.period, "bw_change")
+        self._push_event(self.cfg.batch_interval, "batch")
+
+        while self._events:
+            t, _, kind, payload = heapq.heappop(self._events)
+            if t > until_time or self.result.n_commits >= until_commits:
+                break
+            handler = getattr(self, f"_on_{kind}")
+            handler(t, **payload)
+
+        self.result.sim_time = min(t, until_time)
+        self.result.drops = self.scheduler.n_dropped
+        return self.result
+
+    # ------------------------------------------------------------------ #
+    # event handlers
+    # ------------------------------------------------------------------ #
+    def _schedule_compute(self, worker: str, t_start: float) -> None:
+        slow = self.straggler.sample(self.rng)
+        self._push_event(t_start + self.compute_time * slow, "compute_done",
+                         worker=worker)
+
+    def _on_compute_done(self, t: float, worker: str) -> None:
+        version = self.v_server  # model version the worker pulled
+        size, norm = (self.on_compute(worker, version) if self.on_compute
+                      else (self.update_size,
+                            1.0 / math.sqrt(1 + len(self.result.commits))))
+        uid = next(self._uid)
+        self._uid_meta[uid] = {"worker": worker, "version": version}
+        self._pending.append(Update(uid=uid, worker=worker, size=size,
+                                    version=version, norm=norm, t_avail=t))
+
+    def _on_bw_change(self, t: float) -> None:
+        """Paper's N settings: every period, every NIC re-draws its rate."""
+        for w in self.workers:
+            up, down = self.bandwidth.sample(self.rng), self.bandwidth.sample(self.rng)
+            self.net_actual.set_bandwidth(w, t, up=up, down=down)
+            self._push_event(t + self.monitor_lag, "monitor_report",
+                             host=w, up=up, down=down)
+        self._push_event(t + self.bandwidth.period, "bw_change")
+
+    def _on_monitor_report(self, t: float, host: str, up: float,
+                           down: float) -> None:
+        self.net_lagged.set_bandwidth(host, t, up=up, down=down)
+
+    def _on_batch(self, t: float) -> None:
+        self._push_event(t + self.cfg.batch_interval, "batch")
+        if not self._pending:
+            return
+        batch, self._pending = self._pending, []
+
+        import time as _time
+        w0 = _time.perf_counter()
+        plan = self.scheduler.schedule_batch(batch, self.net_lagged.copy(),
+                                             t_now=t)
+        self.result.scheduler_wall_time += _time.perf_counter() - w0
+        self.result.scheduler_batches += 1
+
+        # Enact the plan on the *actual* network: replay the same structure
+        # (order, grouping) and take true completion times from it.
+        commit_times = self._enact(plan, t)
+
+        for g in plan.dropped:
+            meta = self._uid_meta.pop(g.uid)
+            if self.on_drop:
+                self.on_drop(meta["worker"], meta["version"])
+            # dropped at the worker itself -> it restarts compute right away
+            self._schedule_compute(meta["worker"], t)
+
+        for g in plan.order:
+            self._push_event(commit_times[g.uid], "commit", uid=g.uid,
+                             aggregated=plan.aggregation.assignment.get(g.uid, 0) != 0)
+
+        if plan.replication is not None and plan.replication.frozen:
+            for u in plan.replication.frozen:
+                self.result.bytes_to_replica += u.size
+            self.result.replica_divergence_trace.append(
+                (t, plan.replication.divergence_after))
+
+    def _enact(self, plan: BatchPlan, t_now: float) -> Dict[int, float]:
+        """Replay the plan's structure on the actual network -> true times."""
+        commit: Dict[int, float] = {}
+        server = self.cfg.server
+        for grp in plan.aggregation.groups:
+            if grp.aggregator is None:
+                for g in grp.members:
+                    tr = self.net_actual.reserve(g.worker, server, g.size,
+                                                 max(g.t_avail, t_now))
+                    commit[g.uid] = tr.t_end
+                    self.result.bytes_to_server += g.size
+            else:
+                t_ready = t_now
+                agg_size = 0.0
+                for g in grp.members:
+                    tr = self.net_actual.reserve(g.worker, grp.aggregator,
+                                                 g.size, max(g.t_avail, t_now))
+                    t_ready = max(t_ready, tr.t_end)
+                    agg_size = max(agg_size, g.size)
+                if grp.members:
+                    tr = self.net_actual.reserve(grp.aggregator, server,
+                                                 agg_size, t_ready)
+                    self.result.bytes_to_server += agg_size
+                    for g in grp.members:
+                        commit[g.uid] = tr.t_end
+        return commit
+
+    def _on_commit(self, t: float, uid: int, aggregated: bool) -> None:
+        meta = self._uid_meta.pop(uid)
+        rec = CommitRecord(time=t, worker=meta["worker"], uid=uid,
+                           version_used=meta["version"],
+                           version_committed=self.v_server,
+                           aggregated=aggregated)
+        self.v_server += 1
+        self.result.commits.append(rec)
+        self.result.delay.record(rec.delay)
+        if self.on_commit:
+            self.on_commit(rec)
+        # worker pulls the fresh model and starts the next mini-batch.
+        pull = self.net_actual.transfer_time(self.cfg.server, meta["worker"],
+                                             self.model_size, t)
+        self._schedule_compute(meta["worker"], pull)

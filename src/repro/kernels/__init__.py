@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+* ``flash_attention`` — blockwise online-softmax attention (every attn arch)
+* ``grad_aggregate``  — fused weighted-sum + norm (the MLfabric aggregator op)
+* ``quantize``        — int8 block quantization (gradient compression)
+
+Each has: the kernel (pl.pallas_call + BlockSpec), a jit wrapper in
+``ops.py`` (interpret-mode on CPU), and a pure-jnp oracle in ``ref.py``.
+"""
+
+from .ops import (compress_update, dequantize_op, flash_attention_op,
+                  grad_aggregate_op, quantize_op)
+
+__all__ = ["compress_update", "dequantize_op", "flash_attention_op",
+           "grad_aggregate_op", "quantize_op"]

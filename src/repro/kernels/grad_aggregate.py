@@ -1,0 +1,65 @@
+"""Pallas kernel: fused weighted gradient aggregation + norm.
+
+This is the MLfabric *aggregator's* compute (paper §4: aggregators compute
+the "(weighted) sum" of incoming updates) fused with the squared-norm
+reduction the replication algorithm needs (workers/aggregators ship ||u||
+with every push, Table 1).  Fusing saves one full HBM pass over the
+aggregated gradient — on an aggregator host the op is purely memory-bound,
+so the fusion is a straight ~33% traffic cut (read N + write 1 vs read
+N + write 1 + read 1).
+
+Tiling: grid over D/block_d column tiles; each step stages an [N, block_d]
+tile of the stacked updates into VMEM, reduces over N on the VPU, writes
+the aggregated tile and accumulates the tile's sum-of-squares into an SMEM
+scalar emitted per-tile (summed by the jit wrapper).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _agg_kernel(u_ref, w_ref, out_ref, ssq_ref):
+    u = u_ref[...].astype(jnp.float32)          # [N, block_d]
+    w = w_ref[...].astype(jnp.float32)          # [N, 1]
+    agg = jnp.sum(u * w, axis=0)                # [block_d]
+    out_ref[...] = agg.astype(out_ref.dtype)
+    ssq_ref[0] = jnp.sum(jnp.square(agg))
+
+
+def grad_aggregate(updates: jax.Array, weights: jax.Array, *,
+                   block_d: int = 2048, interpret: bool = False
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """updates: [N, D]; weights: [N] -> (agg [D] same dtype, sumsq [] f32).
+
+    D must be a multiple of ``block_d`` (the wrapper in ops.py pads).
+    """
+    n, d = updates.shape
+    block_d = min(block_d, d)
+    assert d % block_d == 0, (d, block_d)
+    n_blocks = d // block_d
+
+    agg, ssq = pl.pallas_call(
+        _agg_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((n, block_d), lambda i: (0, i)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_d,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), updates.dtype),
+            jax.ShapeDtypeStruct((n_blocks,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(updates, weights[:, None])
+    return agg, jnp.sum(ssq)

@@ -1,0 +1,75 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU the Pallas path runs compiled; everywhere else (this CPU container,
+unit tests) the same kernel body executes via ``interpret=True``.  Each op
+also exposes the pure-jnp reference; ``tests/test_kernels_*.py`` sweeps
+shapes/dtypes asserting allclose between the two.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention as _flash
+from .grad_aggregate import grad_aggregate as _agg
+from .quantize import dequantize as _dequant, quantize as _quant
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention_op(q, k, v, *, causal: bool = True, block_q: int = 128,
+                       block_k: int = 128):
+    """q: [B, H, Sq, D]; k, v: [B, KVH, Skv, D] -> [B, H, Sq, D]."""
+    return _flash(q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+                  interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def grad_aggregate_op(updates, weights, *, block_d: int = 2048):
+    """Weighted-sum N stacked updates + fused ||agg||^2 (one HBM pass)."""
+    n, d = updates.shape
+    pad = (-d) % block_d
+    if pad:
+        updates = jnp.pad(updates, ((0, 0), (0, pad)))
+    agg, ssq = _agg(updates, weights, block_d=min(block_d, d + pad),
+                    interpret=not _on_tpu())
+    return agg[:d], ssq
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def quantize_op(x, *, block: int = 256):
+    d = x.shape[0]
+    pad = (-d) % block
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    q, s = _quant(x, block=block, interpret=not _on_tpu())
+    return q, s
+
+
+@functools.partial(jax.jit, static_argnames=("block", "orig_len"))
+def dequantize_op(q, scales, *, block: int = 256,
+                  orig_len: Optional[int] = None):
+    x = _dequant(q, scales, block=block, interpret=not _on_tpu())
+    return x[:orig_len] if orig_len is not None else x
+
+
+def compress_update(update_flat: jax.Array, *, block: int = 256):
+    """Round-trip helper used by the PS path: returns (payload, ratio)."""
+    q, s = quantize_op(update_flat, block=block)
+    ratio = update_flat.nbytes / (q.nbytes + s.nbytes)
+    return (q, s), ratio
+
+
+# re-export references for test convenience
+flash_attention_ref = ref.flash_attention_ref
+grad_aggregate_ref = ref.grad_aggregate_ref
+quantize_ref = ref.quantize_ref
+dequantize_ref = ref.dequantize_ref

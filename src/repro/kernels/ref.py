@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        scale: Optional[float] = None) -> jax.Array:
+    """q: [B, H, Sq, D]; k, v: [B, KVH, Skv, D] -> [B, H, Sq, D]."""
+    b, h, sq, d = q.shape
+    kvh, skv = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, kvh, g, sq, d)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, sq, d).astype(q.dtype)
+
+
+def grad_aggregate_ref(updates: jax.Array, weights: jax.Array,
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Weighted sum of N stacked updates + the squared norm of the result.
+
+    updates: [N, D]; weights: [N] -> (agg [D], sumsq [] f32).
+    The aggregator's compute (paper §4: "(weighted) sum of incoming
+    updates") fused with the norm that replication needs (Table 1).
+    """
+    agg = jnp.einsum("nd,n->d", updates.astype(jnp.float32),
+                     weights.astype(jnp.float32))
+    return agg.astype(updates.dtype), jnp.sum(jnp.square(agg))
+
+
+def quantize_ref(x: jax.Array, *, block: int = 256
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Block-wise symmetric int8 quantization (gradient compression).
+
+    x: [D] (D % block == 0) -> (q int8 [D], scales f32 [D/block]).
+    """
+    d = x.shape[0]
+    xb = x.reshape(d // block, block).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xb), axis=1) / 127.0
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(xb / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(d), scale
+
+
+def dequantize_ref(q: jax.Array, scales: jax.Array, *,
+                   block: int = 256) -> jax.Array:
+    d = q.shape[0]
+    xb = q.reshape(d // block, block).astype(jnp.float32) * scales[:, None]
+    return xb.reshape(d)

@@ -1,0 +1,161 @@
+"""Loop-aware HLO analysis: accurate collective bytes and dot FLOPs.
+
+``compiled.cost_analysis()`` and naive text scans count a ``while`` body
+ONCE, but scan-over-layers bodies execute ``known_trip_count`` times.  This
+module parses the post-SPMD HLO text into computations, builds a per-
+computation instruction-shape table (operands are referenced by name only),
+reads each while op's ``backend_config known_trip_count``, and propagates
+execution counts through the call graph — yielding totals that reflect what
+one device actually executes per step.
+
+Used by the dry-run and benchmarks/roofline.py for the §Roofline terms.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
+          "u32": 4, "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1,
+          "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_DEF_RE = re.compile(r"^%?([\w.\-]+)\s*=\s*(\(?)([a-z]+[0-9]*[a-z0-9]*)\[([0-9,]*)\]")
+_PARAM_RE = re.compile(r"([\w.\-]+):\s*([a-z]+[0-9]*[a-z0-9]*)\[([0-9,]*)\]")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLEE_RE = re.compile(r"(?:body=|to_apply=|calls=|condition=)%?([\w.\-]+)")
+_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BATCH_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _nbytes(dtype: str, dims: Tuple[int, ...]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n * _BYTES.get(dtype, 4)
+
+
+@dataclass
+class Computation:
+    name: str
+    shapes: Dict[str, Tuple[str, Tuple[int, ...]]] = field(default_factory=dict)
+    coll_bytes: Dict[str, int] = field(default_factory=dict)
+    dot_flops: float = 0.0
+    calls: List[Tuple[str, int]] = field(default_factory=list)
+
+
+def _parse_dims(s: str) -> Tuple[int, ...]:
+    return tuple(int(d) for d in s.split(",") if d)
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    current: Optional[Computation] = None
+    pending: List[Tuple[Computation, str]] = []  # second pass: operand lookup
+
+    for raw in text.splitlines():
+        h = _HEADER_RE.match(raw)
+        if h and raw.rstrip().endswith("{"):
+            current = Computation(h.group(2))
+            comps[current.name] = current
+            if h.group(1):
+                entry = current.name
+            for pname, pdt, pdims in _PARAM_RE.findall(h.group(3)):
+                current.shapes[pname] = (pdt, _parse_dims(pdims))
+            continue
+        if current is None:
+            continue
+        line = raw.strip()
+        d = _DEF_RE.match(line)
+        if d:
+            name, is_tuple, dt, dims = d.groups()
+            if not is_tuple:
+                current.shapes[name] = (dt, _parse_dims(dims))
+            pending.append((current, line))
+
+    # second pass: collectives / dots / call edges with full shape tables
+    for comp, line in pending:
+        handled = False
+        for kind in _COLL_KINDS:
+            if re.search(rf"\b{kind}(?:-start)?\(", line):
+                args = line.split(f"{kind}(", 1)[-1] if f"{kind}(" in line \
+                    else line.split(f"{kind}-start(", 1)[-1]
+                args = args.split(")", 1)[0]
+                nbytes = 0
+                for op in _OPERAND_RE.findall(args):
+                    if op in comp.shapes:
+                        nbytes += _nbytes(*comp.shapes[op])
+                if nbytes == 0:
+                    m = _DEF_RE.match(line)
+                    if m and not m.group(2):
+                        nbytes = _nbytes(m.group(3), _parse_dims(m.group(4)))
+                comp.coll_bytes[kind] = comp.coll_bytes.get(kind, 0) + nbytes
+                handled = True
+                break
+        if not handled and re.search(r"\bdot\(", line):
+            m = _DEF_RE.match(line)
+            args = line.split("dot(", 1)[-1].split(")", 1)[0]
+            ops = _OPERAND_RE.findall(args)
+            if m and not m.group(2) and ops and ops[0] in comp.shapes:
+                out_numel = 1
+                for d_ in _parse_dims(m.group(4)):
+                    out_numel *= d_
+                lhs_dt, lhs_dims = comp.shapes[ops[0]]
+                cdims = _DIMS_RE.search(line)
+                k = 1
+                if cdims:
+                    for idx in _parse_dims(cdims.group(1)):
+                        if idx < len(lhs_dims):
+                            k *= lhs_dims[idx]
+                comp.dot_flops += 2.0 * out_numel * k
+        if " while(" in line:
+            trip = 1
+            tm = _TRIP_RE.search(line)
+            if tm:
+                trip = int(tm.group(1))
+            for callee in _CALLEE_RE.findall(line):
+                comp.calls.append((callee, trip))
+        elif "fusion(" in line or " call(" in line or "to_apply=" in line \
+                or "conditional(" in line:
+            for callee in _CALLEE_RE.findall(line):
+                comp.calls.append((callee, 1))
+
+    return comps, entry
+
+
+def analyze(text: str) -> Tuple[Dict[str, int], float]:
+    """Returns (collective bytes by kind, dot FLOPs) per device, with while
+    bodies multiplied by their known trip counts."""
+    comps, entry = parse_hlo(text)
+    if not comps:
+        return {}, 0.0
+    if entry is None:
+        entry = next((n for n in comps if n.startswith("main")),
+                     list(comps)[-1])
+
+    memo: Dict[str, Tuple[Dict[str, int], float]] = {}
+
+    def visit(name: str, depth: int = 0) -> Tuple[Dict[str, int], float]:
+        if name in memo:
+            return memo[name]
+        if name not in comps or depth > 64:
+            return {}, 0.0
+        memo[name] = ({}, 0.0)  # cycle guard
+        c = comps[name]
+        bytes_by_kind = dict(c.coll_bytes)
+        flops = c.dot_flops
+        for callee, mult in c.calls:
+            sub_bytes, sub_flops = visit(callee, depth + 1)
+            for k, v in sub_bytes.items():
+                bytes_by_kind[k] = bytes_by_kind.get(k, 0) + mult * v
+            flops += mult * sub_flops
+        memo[name] = (bytes_by_kind, flops)
+        return memo[name]
+
+    return visit(entry)

@@ -1,0 +1,6 @@
+from .api import Model, build_model, cache_specs, input_specs, params_specs
+from . import attention, layers, mamba, moe, rwkv, transformer
+
+__all__ = ["Model", "build_model", "cache_specs", "input_specs",
+           "params_specs", "attention", "layers", "mamba", "moe", "rwkv",
+           "transformer"]

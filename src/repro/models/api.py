@@ -1,0 +1,114 @@
+"""Public model API: build any assigned arch from its config.
+
+``build_model(cfg)`` returns a ``Model`` bundle of pure functions;
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of a given (arch x shape) cell — the dry-run contract (no
+device allocation; weak-type-correct; shardable).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..configs.shapes import ShapeConfig
+from . import transformer as tf
+from .layers import Params
+
+
+@dataclass(frozen=True)
+class Model:
+    config: ModelConfig
+    init: Callable[[jax.Array], Params]
+    loss_fn: Callable[..., Tuple[jax.Array, Dict[str, jax.Array]]]
+    prefill: Callable[..., Tuple[jax.Array, Params]]
+    decode_step: Callable[..., Tuple[jax.Array, Params]]
+    init_cache: Callable[[int, int], Params]
+
+
+def build_model(cfg: ModelConfig, dtype=jnp.bfloat16) -> Model:
+    return Model(
+        config=cfg,
+        init=functools.partial(tf.init_params, cfg=cfg, dtype=dtype),
+        loss_fn=functools.partial(tf.loss_fn, cfg=cfg),
+        prefill=functools.partial(tf.prefill, cfg=cfg),
+        decode_step=functools.partial(tf.decode_step, cfg=cfg),
+        init_cache=functools.partial(tf.init_cache, cfg, dtype=dtype),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# input specs for the dry-run (ShapeDtypeStruct, no allocation)
+# --------------------------------------------------------------------------- #
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def text_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Text-token count for a given total sequence length (VLM archs give
+    some of the sequence budget to the stubbed frontend tokens)."""
+    if cfg.frontend == "vision":
+        return seq_len - cfg.n_frontend_tokens
+    return seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16, *, kv_int8: bool = False
+                ) -> Dict[str, Any]:
+    """Abstract inputs for (arch x shape): the ``batch`` argument of
+    loss_fn / prefill, or the decode-step operands."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        st = text_len(cfg, s)
+        batch: Dict[str, Any] = {
+            "tokens": _sds((b, st), jnp.int32),
+        }
+        if shape.kind == "train":
+            batch["labels"] = _sds((b, st), jnp.int32)
+        if cfg.frontend == "vision":
+            batch["frontend_embeds"] = _sds((b, cfg.n_frontend_tokens,
+                                             cfg.d_model), dtype)
+        if cfg.frontend == "audio":
+            batch["frontend_embeds"] = _sds((b, cfg.encoder.n_frames,
+                                             cfg.d_model), dtype)
+        return batch
+    # decode: one token + the cache at seq_len
+    return {
+        "tokens": _sds((b, 1), jnp.int32),
+        "pos": _sds((), jnp.int32),
+        "cache": cache_specs(cfg, b, s, dtype, kv_int8=kv_int8),
+    }
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16, *, kv_int8: bool = False) -> Params:
+    """Abstract decode cache: same structure as ``init_cache``."""
+    gs, ng = cfg.group_size, cfg.n_groups
+
+    def stacked(idx):
+        return {k: _sds((ng, *shape), dt)
+                for k, (shape, dt) in tf.layer_cache_spec(
+                    cfg, idx, batch, max_len, dtype,
+                    kv_int8=kv_int8).items()}
+
+    if gs == 1:
+        cache: Params = {"layers": stacked(0)}
+    else:
+        cache = {"layers": tuple(stacked(s) for s in range(gs))}
+    if cfg.encoder is not None:
+        nf = cfg.encoder.n_frames
+        kv = _sds((cfg.n_layers, batch, nf, cfg.n_kv_heads, cfg.head_dim),
+                  dtype)
+        cache["cross_kv"] = (kv, kv)
+    return cache
+
+
+def params_specs(cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    """Abstract parameters via eval_shape (no allocation)."""
+    return jax.eval_shape(
+        lambda: tf.init_params(jax.random.key(0), cfg, dtype))

@@ -1,0 +1,159 @@
+"""Whisper-style encoder-decoder backbone (conv frontend stubbed).
+
+The encoder consumes precomputed frame embeddings [B, n_frames, d] (the
+assignment's audio stub), adds sinusoidal positions and runs bidirectional
+attention layers.  The decoder is the standard stack plus one cross-attention
+sub-layer per decoder layer against the encoder output.  Decode keeps the
+usual self-attention KV cache plus fixed cross-attention KV computed once at
+prefill.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..dist.policy import constrain
+from . import attention as attn
+from .layers import (Params, apply_mlp, apply_norm, embed_tokens, init_mlp,
+                     init_norm, sinusoidal_positions, unembed)
+from . import transformer as tf
+
+
+# --------------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------------- #
+def init_encoder(key: jax.Array, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    enc = cfg.encoder
+    keys = jax.random.split(key, enc.n_layers)
+    layers = []
+    for k in keys:
+        k1, k2 = jax.random.split(k)
+        layers.append({
+            "norm1": init_norm(cfg.norm, cfg.d_model, dtype),
+            "attn": attn.init_gqa(k1, cfg, dtype),
+            "norm2": init_norm(cfg.norm, cfg.d_model, dtype),
+            "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, act=cfg.act,
+                            bias=cfg.mlp_bias, dtype=dtype),
+        })
+    return {"layers": tf._stack_trees(layers),
+            "final_norm": init_norm(cfg.norm, cfg.d_model, dtype)}
+
+
+def init_cross_layers(key: jax.Array, cfg: ModelConfig,
+                      dtype=jnp.bfloat16) -> Params:
+    keys = jax.random.split(key, cfg.n_layers)
+    layers = [{"norm": init_norm(cfg.norm, cfg.d_model, dtype),
+               "attn": attn.init_gqa(k, cfg, dtype)} for k in keys]
+    return tf._stack_trees(layers)
+
+
+# --------------------------------------------------------------------------- #
+# encoder forward
+# --------------------------------------------------------------------------- #
+def encode(params: Params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """frames: [B, n_frames, d] (stub embeddings) -> encoder output."""
+    enc_p = params["encoder"]
+    h = frames + sinusoidal_positions(frames.shape[1],
+                                      cfg.d_model).astype(frames.dtype)
+
+    def body(hh, layer_p):
+        hn = apply_norm(cfg.norm, layer_p["norm1"], hh)
+        out, _ = attn.gqa_forward(layer_p["attn"], hn, cfg, causal=False)
+        hh = hh + out
+        hn = apply_norm(cfg.norm, layer_p["norm2"], hh)
+        hh = hh + apply_mlp(layer_p["mlp"], hn, act=cfg.act)
+        return hh, None
+
+    h, _ = jax.lax.scan(body, h, enc_p["layers"])
+    return apply_norm(cfg.norm, enc_p["final_norm"], h)
+
+
+def _cross_kv(cross_p: Params, enc_out: jax.Array, cfg: ModelConfig):
+    """Per-decoder-layer cross K/V from the encoder output (stacked [L,...])."""
+    def per_layer(layer_p):
+        b, s, _ = enc_out.shape
+        k = (enc_out @ layer_p["attn"]["wk"])
+        v = (enc_out @ layer_p["attn"]["wv"])
+        if "bk" in layer_p["attn"]:
+            k = k + layer_p["attn"]["bk"]
+            v = v + layer_p["attn"]["bv"]
+        hd = cfg.head_dim
+        return (k.reshape(b, s, -1, hd), v.reshape(b, s, -1, hd))
+
+    return jax.vmap(per_layer)(cross_p)
+
+
+# --------------------------------------------------------------------------- #
+# decoder with cross-attention
+# --------------------------------------------------------------------------- #
+def _decoder_stack(params, h, cross_kv, cfg, *, remat=True,
+                   collect_cache=False):
+    def body(carry, xs):
+        hh, aux = carry
+        layer_p, cross_p, (ck, cv) = xs
+        hh, cache, a = tf.layer_forward(layer_p, hh, cfg, 0)
+        hn = apply_norm(cfg.norm, cross_p["norm"], hh)
+        q = hn  # cross attention: q from decoder, kv from encoder
+        out, _ = attn.gqa_forward(cross_p["attn"], q, cfg, xattn_kv=(ck, cv))
+        hh = hh + out
+        hh = constrain(hh, "residual")
+        return (hh, aux + a), (cache if collect_cache else None)
+
+    if remat:
+        body = jax.checkpoint(body)
+    (h, aux), caches = jax.lax.scan(
+        body, (h, jnp.zeros((), jnp.float32)),
+        (params["layers"], params["cross"], cross_kv))
+    return h, caches, aux
+
+
+def encdec_forward(params: Params, batch: Dict[str, jax.Array],
+                   cfg: ModelConfig, *, remat: bool = True,
+                   collect_cache: bool = False):
+    enc_out = encode(params, batch["frontend_embeds"], cfg)
+    cross_kv = _cross_kv(params["cross"], enc_out, cfg)
+    h = embed_tokens(params["embeds"], batch["tokens"])
+    s = h.shape[1]
+    h = h + sinusoidal_positions(s, cfg.d_model).astype(h.dtype)
+    h = constrain(h, "residual")
+    h, caches, aux = _decoder_stack(params, h, cross_kv, cfg, remat=remat,
+                                    collect_cache=collect_cache)
+    h = apply_norm(cfg.norm, params["final_norm"], h)
+    cache = None
+    if collect_cache:
+        cache = {"layers": caches, "cross_kv": cross_kv}
+    return h, cache, aux
+
+
+def encdec_decode_step(params: Params, cache: Params, tokens: jax.Array,
+                       pos: jax.Array, cfg: ModelConfig):
+    h = embed_tokens(params["embeds"], tokens)
+    d = cfg.d_model
+    # absolute sinusoidal position embedding at the (dynamic) position
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+    angle = pos.astype(jnp.float32) / jnp.power(10000.0, dim / d)
+    pos_emb = jnp.concatenate([jnp.sin(angle), jnp.cos(angle)])
+    h = h + pos_emb.astype(h.dtype)
+
+    ck_all, cv_all = cache["cross_kv"]
+    n_frames = ck_all.shape[2]
+
+    def body(hh, xs):
+        layer_p, cross_p, layer_c, ck, cv = xs
+        hh, c_new = tf.layer_decode(layer_p, hh, layer_c, pos, cfg, 0)
+        hn = apply_norm(cfg.norm, cross_p["norm"], hh)
+        out = attn.gqa_cross_decode(cross_p["attn"], hn, ck, cv,
+                                    jnp.asarray(n_frames))
+        return hh + out, c_new
+
+    h, new_caches = jax.lax.scan(
+        body, h, (params["layers"], params["cross"], cache["layers"],
+                  ck_all, cv_all))
+    h = apply_norm(cfg.norm, params["final_norm"], h)
+    logits = unembed(params["embeds"], h[:, -1])
+    new_cache = {"layers": new_caches, "cross_kv": cache["cross_kv"]}
+    return constrain(logits, "logits"), new_cache

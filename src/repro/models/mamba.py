@@ -1,0 +1,173 @@
+"""Mamba (S6 selective SSM) layer — the Jamba hybrid's recurrent block.
+
+Training/prefill uses a *chunked associative scan*: the diagonal recurrence
+``h_t = a_t * h_{t-1} + b_t`` is evaluated with ``jax.lax.associative_scan``
+inside fixed-size time chunks (bounded memory), with the SSM state carried
+across chunks by an outer ``lax.scan`` — TPU-friendly (no per-step loop).
+Decode keeps {conv window, ssm state} and advances one step.
+
+The depthwise causal conv1d (kernel 4) is expressed as a sum of shifted
+slices (einsum-free, GSPMD-friendly).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import MambaConfig, ModelConfig
+from .layers import Params, dense_init
+
+
+def init_mamba(key: jax.Array, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    m: MambaConfig = cfg.mamba
+    d = cfg.d_model
+    di, n, r = m.inner(d), m.d_state, m.rank(d)
+    ks = jax.random.split(key, 7)
+    # S4D-real initialization for A (negative real spectrum)
+    a_log = jnp.log(jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                     (di, n)))
+    dt_bias = jnp.log(jnp.exp(jnp.clip(
+        jax.random.uniform(ks[5], (di,), jnp.float32) * 0.1, 1e-4, None)) - 1.0
+        + 1e-6)
+    k0a, k0b = jax.random.split(ks[6])
+    return {
+        # separate x/z projections: splitting one [d, 2*di] matrix would
+        # slice a model-sharded dim mid-shard (resharding collectives)
+        "in_x": dense_init(k0a, d, di, dtype=dtype),
+        "in_z": dense_init(k0b, d, di, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (m.d_conv, di), jnp.float32)
+                   / math.sqrt(m.d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype=dtype),
+        "x_proj": dense_init(ks[2], di, r + 2 * n, dtype=dtype),
+        "dt_proj": dense_init(ks[3], r, di, dtype=dtype),
+        "dt_bias": dt_bias,
+        "a_log": a_log,                       # [di, n] f32
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, dtype=dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 history: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time via shifted adds.
+
+    x: [B, T, di]; w: [K, di]; history: [B, K-1, di] (previous tokens).
+    """
+    k = w.shape[0]
+    ext = jnp.concatenate([history.astype(x.dtype), x], axis=1)  # [B,T+K-1,di]
+    t = x.shape[1]
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + ext[:, i:i + t, :] * w[i]
+    return out + b
+
+
+def _ssm_chunk(h0: jax.Array, a: jax.Array, b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Associative scan of h_t = a_t h_{t-1} + b_t within one chunk.
+
+    h0: [B, di, n]; a, b: [B, T, di, n].  Returns (h_all [B,T,di,n], h_T).
+    """
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    a_cum, b_cum = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h_all = a_cum * h0[:, None] + b_cum
+    return h_all, h_all[:, -1]
+
+
+def mamba_scan(x_in: jax.Array, dt: jax.Array, a_log: jax.Array,
+               b_ssm: jax.Array, c_ssm: jax.Array, d_skip: jax.Array,
+               h0: jax.Array, *, chunk: int = 128
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Selective-scan core.  x_in, dt: [B,T,di]; b_ssm, c_ssm: [B,T,n].
+
+    Returns (y [B,T,di], h_final [B,di,n]).  f32 state math.
+    """
+    bsz, t, di = x_in.shape
+    n = b_ssm.shape[-1]
+    a = -jnp.exp(a_log)                                        # [di, n]
+
+    xf = x_in.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = b_ssm.astype(jnp.float32)
+    cf = c_ssm.astype(jnp.float32)
+
+    tc = min(chunk, t)
+    assert t % tc == 0, (t, tc)
+    n_chunks = t // tc
+
+    def chunk_body(h, xs):
+        xc, dtc, bc, cc = xs                                   # [B,tc,...]
+        a_bar = jnp.exp(dtc[..., None] * a)                    # [B,tc,di,n]
+        b_bar = (dtc * xc)[..., None] * bc[:, :, None, :]      # [B,tc,di,n]
+        h_all, h_next = _ssm_chunk(h, a_bar, b_bar)
+        y = jnp.einsum("btdn,btn->btd", h_all, cc)
+        return h_next, y
+
+    if n_chunks == 1:
+        h_final, y = chunk_body(h0, (xf, dtf, bf, cf))
+    else:
+        xs = tuple(z.reshape(bsz, n_chunks, tc, *z.shape[2:]).swapaxes(0, 1)
+                   for z in (xf, dtf, bf, cf))
+        # remat the chunk: backward recomputes the within-chunk associative
+        # scan instead of saving [n_chunks, B, tc, di, n] f32 residual
+        # stacks (the 188GB/device jamba blow-up; EXPERIMENTS.md §Perf)
+        h_final, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0, xs)
+        y = ys.swapaxes(0, 1).reshape(bsz, t, di)
+
+    y = y + xf * d_skip
+    return y.astype(x_in.dtype), h_final
+
+
+def mamba_forward(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                  chunk: int = 128,
+                  state: Dict[str, jax.Array] | None = None,
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence mamba block.  Returns (out, final_state)."""
+    m: MambaConfig = cfg.mamba
+    bsz, t, d = x.shape
+    di, n, r = m.inner(d), m.d_state, m.rank(d)
+
+    if state is None:
+        conv_hist = jnp.zeros((bsz, m.d_conv - 1, di), x.dtype)
+        h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    else:
+        conv_hist, h0 = state["conv"], state["ssm"]
+
+    x_in = x @ p["in_x"]
+    z = x @ p["in_z"]
+    x_conv = _causal_conv(x_in, p["conv_w"], p["conv_b"], conv_hist)
+    x_act = jax.nn.silu(x_conv)
+
+    proj = x_act @ p["x_proj"]                                 # [B,T,r+2n]
+    dt_r, b_ssm, c_ssm = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"]
+                         + p["dt_bias"].astype(dt_r.dtype))    # [B,T,di]
+
+    y, h_final = mamba_scan(x_act, dt, p["a_log"], b_ssm, c_ssm,
+                            p["d_skip"], h0, chunk=chunk)
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    new_state = {"conv": jax.lax.dynamic_slice_in_dim(
+        jnp.concatenate([conv_hist, x_in], axis=1), t, m.d_conv - 1, axis=1),
+        "ssm": h_final}
+    return out, new_state
+
+
+def mamba_decode(p: Params, x: jax.Array, state: Dict[str, jax.Array],
+                 cfg: ModelConfig) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token step.  x: [B, 1, d]; state {conv: [B,K-1,di], ssm}."""
+    out, new_state = mamba_forward(p, x, cfg, chunk=1, state=state)
+    return out, new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    m: MambaConfig = cfg.mamba
+    di = m.inner(cfg.d_model)
+    return {"conv": jnp.zeros((batch, m.d_conv - 1, di), dtype),
+            "ssm": jnp.zeros((batch, di, m.d_state), jnp.float32)}

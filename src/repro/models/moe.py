@@ -1,0 +1,130 @@
+"""Mixture-of-Experts with capacity-based einsum dispatch (GShard-style).
+
+Expert weights carry a leading expert dim that is sharded over the ``model``
+mesh axis (expert parallelism): 160/16 = 10 DeepSeek experts per shard.
+Dispatch/combine are one-hot einsums — the GSPMD-proven TPU formulation —
+evaluated over *sequence chunks* so the [B, T, E, C] dispatch tensor stays
+small (DESIGN.md §5).  Shared experts (DeepSeek-V2) are a plain dense MLP
+that always runs.
+
+The router is softmax -> top-k with renormalized gates, plus the standard
+load-balancing auxiliary loss (Switch/GShard aux), returned to the caller.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, MoEConfig
+from ..dist.policy import constrain
+from .layers import Params, activation, dense_init, init_mlp, apply_mlp
+
+
+def capacity(tokens_per_group: int, moe: MoEConfig) -> int:
+    c = int(math.ceil(tokens_per_group * moe.top_k / moe.n_experts
+                      * moe.capacity_factor))
+    return max(c, 1)
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    moe = cfg.moe
+    d, f, e = cfg.d_model, moe.d_expert, moe.n_experts
+    ks = jax.random.split(key, 5)
+    std = 1.0 / math.sqrt(d)
+
+    def expert_stack(k, d_in, d_out):
+        return (jax.random.normal(k, (e, d_in, d_out), dtype=jnp.float32)
+                * std).astype(dtype)
+
+    p: Params = {
+        "router": dense_init(ks[0], d, e, dtype=jnp.float32),  # router in f32
+        "w_gate": expert_stack(ks[1], d, f),
+        "w_up": expert_stack(ks[2], d, f),
+        "w_down": expert_stack(ks[3], f, d),
+    }
+    if moe.n_shared:
+        p["shared"] = init_mlp(ks[4], d, f * moe.n_shared, act=cfg.act,
+                               bias=False, dtype=dtype)
+    return p
+
+
+def _dispatch_chunk(x: jax.Array, router_probs: jax.Array, moe: MoEConfig,
+                    cap: int) -> Tuple[jax.Array, jax.Array]:
+    """Build (dispatch, combine) one-hots for one [B, T, d] chunk.
+
+    dispatch: [B, T, E, C] in {0,1}; combine: dispatch * gate prob.
+    Top-k choices claim capacity slots in priority order (GShard).
+    """
+    b, t, e = router_probs.shape
+    gates, idx = jax.lax.top_k(router_probs, moe.top_k)        # [B,T,K]
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+
+    counts = jnp.zeros((b, e), jnp.int32)
+    dispatch = jnp.zeros((b, t, e, cap), x.dtype)
+    combine = jnp.zeros((b, t, e, cap), jnp.float32)
+    for choice in range(moe.top_k):
+        onehot = jax.nn.one_hot(idx[..., choice], e, dtype=jnp.int32)  # [B,T,E]
+        pos = jnp.cumsum(onehot, axis=1) - 1 + counts[:, None, :]      # slot id
+        keep = (pos < cap) & (onehot > 0)
+        counts = counts + jnp.sum(onehot, axis=1)
+        slot = jax.nn.one_hot(jnp.where(keep, pos, -1), cap, dtype=x.dtype)
+        d_c = onehot[..., None].astype(x.dtype) * slot                 # [B,T,E,C]
+        dispatch = dispatch + d_c
+        combine = combine + d_c.astype(jnp.float32) * gates[..., choice,
+                                                            None, None]
+    return dispatch, combine
+
+
+def moe_forward(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                chunk: int = 256) -> Tuple[jax.Array, jax.Array]:
+    """MoE MLP over [B, S, d].  Returns (out, aux_loss).
+
+    Sequence is processed in chunks so the dispatch one-hots stay bounded;
+    each chunk is an independent dispatch group (capacity is per-chunk).
+    """
+    moe = cfg.moe
+    b, s, d = x.shape
+    act = activation(cfg.act)
+    t = min(chunk, s)
+    assert s % t == 0, (s, t)
+    n_chunks = s // t
+    cap = capacity(t, moe)
+
+    router_logits = x.astype(jnp.float32) @ p["router"]        # [B,S,E]
+    router_probs = jax.nn.softmax(router_logits, axis=-1)
+
+    # load-balance aux loss (computed over the full sequence, f32)
+    me = jnp.mean(router_probs, axis=(0, 1))                   # [E]
+    top1 = jnp.argmax(router_probs, axis=-1)
+    ce = jnp.mean(jax.nn.one_hot(top1, moe.n_experts, dtype=jnp.float32),
+                  axis=(0, 1))
+    aux = moe.n_experts * jnp.sum(me * ce)
+
+    def run_chunk(xc, pc):
+        # NOTE (§Perf, refuted): constraining xe/out to sharded specs inside
+        # the chunk loop forces per-chunk resharding storms (collective
+        # bytes x14, peak memory x1.9 on deepseek train_4k) — GSPMD's own
+        # placement for the chunk einsums is already the better schedule.
+        dispatch, combine = _dispatch_chunk(xc, pc, moe, cap)
+        xe = jnp.einsum("btec,btd->becd", dispatch, xc)        # [B,E,C,d]
+        h = act(jnp.einsum("becd,edf->becf", xe, p["w_gate"])) \
+            * jnp.einsum("becd,edf->becf", xe, p["w_up"])
+        ye = jnp.einsum("becf,efd->becd", h, p["w_down"])      # [B,E,C,d]
+        return jnp.einsum("btec,becd->btd", combine.astype(ye.dtype), ye)
+
+    if n_chunks == 1:
+        out = run_chunk(x, router_probs)
+    else:
+        xc = x.reshape(b, n_chunks, t, d).transpose(1, 0, 2, 3)
+        pc = router_probs.reshape(b, n_chunks, t, -1).transpose(1, 0, 2, 3)
+        out = jax.lax.scan(lambda _, xs: (None, run_chunk(*xs)), None,
+                           (xc, pc))[1]
+        out = out.transpose(1, 0, 2, 3).reshape(b, s, d)
+
+    if "shared" in p:
+        out = out + apply_mlp(p["shared"], x, act=cfg.act)
+    return out, aux

@@ -1,0 +1,199 @@
+"""RWKV6 "Finch" time-mix + channel-mix (attention-free, data-dependent decay).
+
+Recurrence per head (state S: [Dk, Dv]):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (diag(u) k_t^T v_t + S_{t-1})
+
+Training/prefill evaluates the recurrence in *time chunks*: within a chunk
+the quadratic form ``A[t, s] = (r_t * P_{t-1} / P_s) . k_s`` (P = cumprod of
+decays) is materialized only at [chunk, chunk] size, and the state is
+carried across chunks — the standard chunked-linear-attention scheme.
+Chunks are kept small (32) with f32 math because ``1/P`` grows when decays
+are strong; per-chunk renormalization would be the next refinement.
+
+Token-shift (ddlerp) follows Finch: a 5-way data-dependent interpolation
+between x_t and x_{t-1} with a low-rank adapter.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, RWKVConfig
+from .layers import Params, dense_init
+
+
+def init_rwkv(key: jax.Array, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    r: RWKVConfig = cfg.rwkv
+    d = cfg.d_model
+    h = r.n_heads(d)
+    ks = jax.random.split(key, 12)
+    lo = r.tokenshift_lora
+    return {
+        # ddlerp token-shift (5 targets: r, k, v, w, g)
+        "mu_x": (jax.random.uniform(ks[0], (5, d)) * 0.5).astype(dtype),
+        "ts_down": dense_init(ks[1], d, 5 * lo, dtype=dtype),
+        "ts_up": (jax.random.normal(ks[2], (5, lo, d), jnp.float32)
+                  * 0.01).astype(dtype),
+        # projections
+        "wr": dense_init(ks[3], d, d, dtype=dtype),
+        "wk": dense_init(ks[4], d, d, dtype=dtype),
+        "wv": dense_init(ks[5], d, d, dtype=dtype),
+        "wg": dense_init(ks[6], d, d, dtype=dtype),
+        "wo": dense_init(ks[7], d, d,
+                         scale=1.0 / math.sqrt(2 * cfg.n_layers), dtype=dtype),
+        # data-dependent decay (LoRA) + per-channel base
+        "w_base": (jax.random.uniform(ks[8], (d,), jnp.float32) * 2.0
+                   - 6.0).astype(jnp.float32),
+        "wd_down": dense_init(ks[9], d, r.decay_lora, dtype=dtype),
+        "wd_up": dense_init(ks[10], r.decay_lora, d, dtype=dtype),
+        # bonus u (per channel)
+        "u": (jax.random.normal(ks[11], (d,), jnp.float32) * 0.1
+              ).astype(jnp.float32),
+        "ln_x_scale": jnp.ones((d,), dtype=dtype),  # per-head group-norm scale
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """[B,T,d] -> previous-token tensor (prev: [B,1,d] boundary state)."""
+    return jnp.concatenate([prev.astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def _ddlerp(p: Params, x: jax.Array, xx: jax.Array) -> jax.Array:
+    """Finch data-dependent lerp -> [5, B, T, d] mixed inputs."""
+    delta = xx - x
+    base = x[None] + delta[None] * p["mu_x"][:, None, None, :]
+    lora = (x @ p["ts_down"])                       # [B,T,5*lo]
+    b, t, _ = x.shape
+    lora = jnp.tanh(lora.reshape(b, t, 5, -1)).transpose(2, 0, 1, 3)
+    adj = jnp.einsum("nbtl,nld->nbtd", lora, p["ts_up"].astype(x.dtype))
+    return base + adj * delta[None]
+
+
+def _wkv_chunk(r, k, v, w, u, s0, *, chunk_size):
+    """One chunk of the Finch recurrence.
+
+    r,k,v,w: [B,H,T,D] (w = per-step decay in (0,1), f32); s0: [B,H,Dk,Dv].
+    Returns (y: [B,H,T,D], s_final).
+    """
+    logw = jnp.log(jnp.maximum(w, 1e-8))
+    logp = jnp.cumsum(logw, axis=2)                       # log P_t
+    p_t = jnp.exp(logp)                                   # [B,H,T,D]
+    p_prev = jnp.exp(logp - logw)                         # P_{t-1}
+    k_div = k * jnp.exp(-logp)                            # k_s / P_s
+
+    # inter-chunk: y_state[t] = (r_t * P_{t-1}) @ s0
+    y_state = jnp.einsum("bhtd,bhde->bhte", r * p_prev, s0)
+    # intra-chunk quadratic form with strict causality
+    att = jnp.einsum("bhtd,bhsd->bhts", r * p_prev, k_div)
+    t = r.shape[2]
+    mask = jnp.tril(jnp.ones((t, t), bool), k=-1)
+    att = jnp.where(mask, att, 0.0)
+    diag = jnp.einsum("bhtd,bhtd->bht", r * u, k)
+    y = y_state + jnp.einsum("bhts,bhse->bhte", att, v) \
+        + diag[..., None] * v
+    s_final = p_t[:, :, -1:].transpose(0, 1, 3, 2) * s0 \
+        + jnp.einsum("bhsd,bhse->bhde", k_div * p_t[:, :, -1:], v)
+    return y, s_final
+
+
+def rwkv_time_mix(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                  state: Dict[str, jax.Array] | None = None,
+                  chunk: int = 32) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Finch time-mix over [B, T, d]."""
+    r_cfg: RWKVConfig = cfg.rwkv
+    b, t, d = x.shape
+    h = r_cfg.n_heads(d)
+    hd = r_cfg.head_dim
+
+    if state is None:
+        prev_x = jnp.zeros((b, 1, d), x.dtype)
+        s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    else:
+        prev_x, s0 = state["shift"], state["wkv"]
+
+    xx = _token_shift(x, prev_x)
+    mr, mk, mv, mw, mg = _ddlerp(p, x, xx)
+
+    def heads(z):
+        return z.reshape(b, t, h, hd).transpose(0, 2, 1, 3).astype(jnp.float32)
+
+    r = heads(mr @ p["wr"])
+    k = heads(mk @ p["wk"])
+    v = heads(mv @ p["wv"])
+    g = (mg @ p["wg"])
+    w_log = p["w_base"] + (jnp.tanh(mw @ p["wd_down"]) @ p["wd_up"]
+                           ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log))                        # decay in (0,1)
+    w = heads(w)
+    u = p["u"].reshape(h, hd)[None, :, None, :]
+
+    tc = min(chunk, t)
+    assert t % tc == 0
+    n_chunks = t // tc
+
+    if n_chunks == 1:
+        y, s_final = _wkv_chunk(r, k, v, w, u, s0, chunk_size=tc)
+    else:
+        def split(z):  # [B,H,T,D] -> [n,B,H,tc,D]
+            return z.reshape(b, h, n_chunks, tc, hd).transpose(2, 0, 1, 3, 4)
+
+        def body(s, xs):
+            rc, kc, vc, wc = xs
+            yc, s_next = _wkv_chunk(rc, kc, vc, wc, u, s, chunk_size=tc)
+            return s_next, yc
+
+        # remat: recompute per-chunk decay/attention in backward (see mamba)
+        s_final, ys = jax.lax.scan(jax.checkpoint(body), s0,
+                                   (split(r), split(k), split(v), split(w)))
+        y = ys.transpose(1, 2, 0, 3, 4).reshape(b, h, t, hd)
+
+    # per-head group norm, then gate
+    mean = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 64e-5)
+    y = y.transpose(0, 2, 1, 3).reshape(b, t, d).astype(x.dtype)
+    y = y * p["ln_x_scale"]
+    out = (y * jax.nn.silu(g)) @ p["wo"]
+
+    new_state = {"shift": x[:, -1:], "wkv": s_final}
+    return out, new_state
+
+
+def rwkv_decode(p: Params, x: jax.Array, state: Dict[str, jax.Array],
+                cfg: ModelConfig) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    return rwkv_time_mix(p, x, cfg, state=state, chunk=1)
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    r = cfg.rwkv
+    d = cfg.d_model
+    h = r.n_heads(d)
+    return {"shift": jnp.zeros((batch, 1, d), dtype),
+            "wkv": jnp.zeros((batch, h, r.head_dim, r.head_dim), jnp.float32)}
+
+
+# channel-mix (RWKV FFN with token shift + squared relu)
+def init_channel_mix(key: jax.Array, cfg: ModelConfig,
+                     dtype=jnp.bfloat16) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {"mu": (jax.random.uniform(ks[0], (d,)) * 0.5).astype(dtype),
+            "wk": dense_init(ks[1], d, f, dtype=dtype),
+            "wv": dense_init(ks[2], f, d, dtype=dtype)}
+
+
+def channel_mix(p: Params, x: jax.Array,
+                state: Dict[str, jax.Array] | None = None,
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    prev = state["cm_shift"] if state is not None \
+        else jnp.zeros_like(x[:, :1])
+    xx = _token_shift(x, prev)
+    mixed = x + (xx - x) * p["mu"]
+    k = jnp.square(jax.nn.relu(mixed @ p["wk"]))
+    return k @ p["wv"], {"cm_shift": x[:, -1:]}

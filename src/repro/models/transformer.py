@@ -1,0 +1,359 @@
+"""Unified decoder stack: every assigned LM arch is this module + a config.
+
+Layer kinds ('a' attention, 'l' MLA, 'm' mamba, 'r' rwkv) and MLP kinds
+(dense / MoE / rwkv channel-mix) compose per the config's ``layer_pattern``.
+Homogeneous stacks scan over layers with stacked params (small HLO, fast
+compile, remat-friendly); heterogeneous stacks (Jamba) scan over *groups* of
+``group_size`` layers.
+
+Cache layout (decode):
+  attention   {k, v}:        [L, B, S, KVH, Dh]
+  MLA         {ckv, krope}:  [L, B, S, R] / [L, B, S, rope]
+  mamba       {conv, ssm}:   [L, B, K-1, di] / [L, B, di, n]
+  rwkv        {shift, wkv, cm_shift}
+with the sequence dim sharded over the ``model`` axis and batch over
+``data`` (see repro/dist/sharding.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..dist.policy import constrain
+from . import attention as attn
+from . import mamba as mamba_mod
+from . import rwkv as rwkv_mod
+from .layers import (Params, apply_mlp, apply_norm, chunked_loss, embed_tokens,
+                     init_embeddings, init_mlp, init_norm, unembed)
+from .moe import init_moe, moe_forward
+
+AUX_LOSS_COEF = 0.01
+
+
+# --------------------------------------------------------------------------- #
+# per-layer init
+# --------------------------------------------------------------------------- #
+def _is_moe_layer(cfg: ModelConfig, idx: int) -> bool:
+    return cfg.moe is not None and cfg.moe.is_moe_layer(idx)
+
+
+def init_layer(key: jax.Array, cfg: ModelConfig, idx: int,
+               dtype=jnp.bfloat16) -> Params:
+    kind = cfg.layer_kind(idx)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Params = {"norm1": init_norm(cfg.norm, cfg.d_model, dtype)}
+    if kind == "a":
+        p["mix"] = attn.init_gqa(k1, cfg, dtype)
+    elif kind == "l":
+        p["mix"] = attn.init_mla(k1, cfg, dtype)
+    elif kind == "m":
+        p["mix"] = mamba_mod.init_mamba(k1, cfg, dtype)
+    elif kind == "r":
+        p["mix"] = rwkv_mod.init_rwkv(k1, cfg, dtype)
+    else:
+        raise ValueError(kind)
+    p["norm2"] = init_norm(cfg.norm, cfg.d_model, dtype)
+    if kind == "r":
+        p["mlp"] = rwkv_mod.init_channel_mix(k2, cfg, dtype)
+    elif _is_moe_layer(cfg, idx):
+        p["mlp"] = init_moe(k2, cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, act=cfg.act,
+                            bias=cfg.mlp_bias, dtype=dtype)
+    return p
+
+
+# --------------------------------------------------------------------------- #
+# per-layer apply (train/prefill mode and decode mode)
+# --------------------------------------------------------------------------- #
+def layer_forward(p: Params, h: jax.Array, cfg: ModelConfig, idx: int, *,
+                  state: Optional[Params] = None,
+                  ) -> Tuple[jax.Array, Params, jax.Array]:
+    """Full-sequence layer.  Returns (h, cache_contribution, aux_loss)."""
+    kind = cfg.layer_kind(idx)
+    aux = jnp.zeros((), jnp.float32)
+    hn = apply_norm(cfg.norm, p["norm1"], h)
+    if kind == "a":
+        mix_out, cache = attn.gqa_forward(p["mix"], hn, cfg)
+    elif kind == "l":
+        mix_out, cache = attn.mla_forward(p["mix"], hn, cfg)
+    elif kind == "m":
+        mix_out, cache = mamba_mod.mamba_forward(
+            p["mix"], hn, cfg, state=state if state else None)
+    elif kind == "r":
+        mix_out, cache = rwkv_mod.rwkv_time_mix(
+            p["mix"], hn, cfg, state=state if state else None)
+    else:
+        raise ValueError(kind)
+    h = h + mix_out
+    h = constrain(h, "residual")
+
+    hn = apply_norm(cfg.norm, p["norm2"], h)
+    if kind == "r":
+        mlp_out, cm_state = rwkv_mod.channel_mix(p["mlp"], hn)
+        cache = {**cache, **cm_state}
+    elif _is_moe_layer(cfg, idx):
+        mlp_out, aux = moe_forward(p["mlp"], hn, cfg)
+    else:
+        mlp_out = apply_mlp(p["mlp"], hn, act=cfg.act)
+    h = h + mlp_out
+    h = constrain(h, "residual")
+    return h, cache, aux
+
+
+def layer_decode(p: Params, h: jax.Array, cache: Params, pos: jax.Array,
+                 cfg: ModelConfig, idx: int) -> Tuple[jax.Array, Params]:
+    """One-token layer step against the cache."""
+    kind = cfg.layer_kind(idx)
+    hn = apply_norm(cfg.norm, p["norm1"], h)
+    if kind == "a" and "k_q" in cache:
+        mix_out, cache_new = attn.gqa_decode_q8(p["mix"], hn, cache, pos, cfg)
+    elif kind == "a":
+        mix_out, cache_new = attn.gqa_decode(p["mix"], hn, cache, pos, cfg)
+    elif kind == "l":
+        mix_out, cache_new = attn.mla_decode(p["mix"], hn, cache, pos, cfg)
+    elif kind == "m":
+        mix_out, cache_new = mamba_mod.mamba_decode(p["mix"], hn, cache, cfg)
+    elif kind == "r":
+        mix_out, cache_new = rwkv_mod.rwkv_decode(p["mix"], hn, cache, cfg)
+    else:
+        raise ValueError(kind)
+    h = h + mix_out
+
+    hn = apply_norm(cfg.norm, p["norm2"], h)
+    if kind == "r":
+        mlp_out, cm_state = rwkv_mod.channel_mix(
+            p["mlp"], hn, state={"cm_shift": cache["cm_shift"]})
+        cache_new = {**cache_new, **cm_state}
+    elif _is_moe_layer(cfg, idx):
+        mlp_out, _ = moe_forward(p["mlp"], hn, cfg)
+    else:
+        mlp_out = apply_mlp(p["mlp"], hn, act=cfg.act)
+    return h + mlp_out, cache_new
+
+
+# --------------------------------------------------------------------------- #
+# cache init (abstract-friendly: plain zeros of the right shape)
+# --------------------------------------------------------------------------- #
+def layer_cache_spec(cfg: ModelConfig, idx: int, batch: int, max_len: int,
+                     dtype=jnp.bfloat16, *, kv_int8: bool = False
+                     ) -> Dict[str, Tuple[Tuple[int, ...], Any]]:
+    kind = cfg.layer_kind(idx)
+    if kind == "a" and kv_int8:
+        shp = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        sshp = (batch, max_len, cfg.n_kv_heads)
+        return {"k_q": (shp, jnp.int8), "v_q": (shp, jnp.int8),
+                "k_s": (sshp, jnp.float32), "v_s": (sshp, jnp.float32)}
+    if kind == "a":
+        shp = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": (shp, dtype), "v": (shp, dtype)}
+    if kind == "l":
+        m = cfg.mla
+        return {"ckv": ((batch, max_len, m.kv_lora_rank), dtype),
+                "krope": ((batch, max_len, m.qk_rope_head_dim), dtype)}
+    if kind == "m":
+        mm = cfg.mamba
+        di = mm.inner(cfg.d_model)
+        return {"conv": ((batch, mm.d_conv - 1, di), dtype),
+                "ssm": ((batch, di, mm.d_state), jnp.float32)}
+    if kind == "r":
+        r = cfg.rwkv
+        h = r.n_heads(cfg.d_model)
+        return {"shift": ((batch, 1, cfg.d_model), dtype),
+                "wkv": ((batch, h, r.head_dim, r.head_dim), jnp.float32),
+                "cm_shift": ((batch, 1, cfg.d_model), dtype)}
+    raise ValueError(kind)
+
+
+def init_layer_cache(cfg: ModelConfig, idx: int, batch: int, max_len: int,
+                     dtype=jnp.bfloat16, *, kv_int8: bool = False) -> Params:
+    return {k: jnp.zeros(shape, dt)
+            for k, (shape, dt) in layer_cache_spec(
+                cfg, idx, batch, max_len, dtype, kv_int8=kv_int8).items()}
+
+
+# --------------------------------------------------------------------------- #
+# the stack: init
+# --------------------------------------------------------------------------- #
+def _stack_trees(trees: List[Params]) -> Params:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_stack(key: jax.Array, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    """Stacked layer params: homogeneous -> one pytree with leading dim L;
+    heterogeneous -> tuple of ``group_size`` pytrees with leading dim G."""
+    gs, ng = cfg.group_size, cfg.n_groups
+    keys = jax.random.split(key, cfg.n_layers).reshape(ng, gs)
+    if gs == 1:
+        layers = [init_layer(keys[i, 0], cfg, i, dtype) for i in range(ng)]
+        return {"layers": _stack_trees(layers)}
+    slots = []
+    for s in range(gs):
+        per_group = [init_layer(keys[g, s], cfg, g * gs + s, dtype)
+                     for g in range(ng)]
+        slots.append(_stack_trees(per_group))
+    return {"layers": tuple(slots)}
+
+
+def init_params(key: jax.Array, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    k_emb, k_stack, k_out, k_enc = jax.random.split(key, 4)
+    p: Params = {
+        "embeds": init_embeddings(k_emb, cfg.padded_vocab, cfg.d_model,
+                                  tie=cfg.tie_embeddings, dtype=dtype),
+        "final_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+        **init_stack(k_stack, cfg, dtype),
+    }
+    if cfg.encoder is not None:
+        from . import encdec
+        p["encoder"] = encdec.init_encoder(k_enc, cfg, dtype)
+        p["cross"] = encdec.init_cross_layers(k_out, cfg, dtype)
+    return p
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16, *, kv_int8: bool = False) -> Params:
+    gs, ng = cfg.group_size, cfg.n_groups
+    if gs == 1:
+        per = [init_layer_cache(cfg, 0, batch, max_len, dtype,
+                                kv_int8=kv_int8) for _ in range(ng)]
+        return {"layers": _stack_trees(per)}
+    slots = []
+    for s in range(gs):
+        per = [init_layer_cache(cfg, s, batch, max_len, dtype,
+                                kv_int8=kv_int8) for _ in range(ng)]
+        slots.append(_stack_trees(per))
+    return {"layers": tuple(slots)}
+
+
+# --------------------------------------------------------------------------- #
+# the stack: full-sequence forward (train / prefill)
+# --------------------------------------------------------------------------- #
+def stack_forward(params: Params, h: jax.Array, cfg: ModelConfig, *,
+                  remat: bool = True, collect_cache: bool = False,
+                  ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+    """Run all layers.  Returns (h, stacked cache or None, total aux loss)."""
+    gs = cfg.group_size
+
+    if gs == 1:
+        def body(carry, layer_p):
+            hh, aux = carry
+            hh, cache, a = layer_forward(layer_p, hh, cfg, 0)
+            ys = cache if collect_cache else None
+            return (hh, aux + a), ys
+
+        if remat:
+            body = jax.checkpoint(body)
+        (h, aux), caches = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                                        params["layers"])
+        return h, ({"layers": caches} if collect_cache else None), aux
+
+    # heterogeneous groups: remat each LAYER inside the group, not just the
+    # group — a group backward otherwise keeps all 8 layers' internals
+    # (mamba chunk states + 14k-wide MoE activations) alive at once
+    per_layer = jax.checkpoint(layer_forward, static_argnums=(2, 3)) \
+        if remat else layer_forward
+
+    def body(carry, slot_params):
+        hh, aux = carry
+        caches = []
+        for s in range(gs):
+            hh, cache, a = per_layer(slot_params[s], hh, cfg, s)
+            aux = aux + a
+            caches.append(cache)
+        return (hh, aux), (tuple(caches) if collect_cache else None)
+
+    (h, aux), caches = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                                    params["layers"])
+    return h, ({"layers": caches} if collect_cache else None), aux
+
+
+def stack_decode(params: Params, h: jax.Array, cache: Params, pos: jax.Array,
+                 cfg: ModelConfig) -> Tuple[jax.Array, Params]:
+    gs = cfg.group_size
+
+    if gs == 1:
+        def body(hh, xs):
+            layer_p, layer_c = xs
+            hh, c_new = layer_decode(layer_p, hh, layer_c, pos, cfg, 0)
+            return hh, c_new
+
+        h, new_caches = jax.lax.scan(body, h, (params["layers"],
+                                               cache["layers"]))
+        return h, {"layers": new_caches}
+
+    def body(hh, xs):
+        slot_params, slot_caches = xs
+        new = []
+        for s in range(gs):
+            hh, c_new = layer_decode(slot_params[s], hh, slot_caches[s], pos,
+                                     cfg, s)
+            new.append(c_new)
+        return hh, tuple(new)
+
+    h, new_caches = jax.lax.scan(body, h, (params["layers"], cache["layers"]))
+    return h, {"layers": new_caches}
+
+
+# --------------------------------------------------------------------------- #
+# model-level entry points (decoder-only; enc-dec overrides in encdec.py)
+# --------------------------------------------------------------------------- #
+def embed_inputs(params: Params, batch: Dict[str, jax.Array],
+                 cfg: ModelConfig) -> jax.Array:
+    """Token embeddings, with the modality-stub prefix for VLM archs."""
+    h = embed_tokens(params["embeds"], batch["tokens"])
+    if cfg.frontend == "vision" and "frontend_embeds" in batch:
+        h = jnp.concatenate(
+            [batch["frontend_embeds"].astype(h.dtype), h], axis=1)
+    return h
+
+
+def forward(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig, *,
+            remat: bool = True, collect_cache: bool = False):
+    if cfg.encoder is not None:
+        from . import encdec
+        return encdec.encdec_forward(params, batch, cfg, remat=remat,
+                                     collect_cache=collect_cache)
+    h = embed_inputs(params, batch, cfg)
+    h = constrain(h, "residual")
+    h, cache, aux = stack_forward(params, h, cfg, remat=remat,
+                                  collect_cache=collect_cache)
+    h = apply_norm(cfg.norm, params["final_norm"], h)
+    return h, cache, aux
+
+
+def loss_fn(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig, *,
+            remat: bool = True) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    h, _, aux = forward(params, batch, cfg, remat=remat)
+    if cfg.frontend == "vision" and "frontend_embeds" in batch:
+        h = h[:, batch["frontend_embeds"].shape[1]:]
+    loss = chunked_loss(h, params["embeds"], batch["labels"], cfg.vocab_size)
+    total = loss + AUX_LOSS_COEF * aux
+    return total, {"loss": loss, "aux_loss": aux}
+
+
+def prefill(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            ) -> Tuple[jax.Array, Params]:
+    """Full-sequence forward that also returns the decode cache.
+    Returns (last-position logits, cache)."""
+    h, cache, _ = forward(params, batch, cfg, remat=False, collect_cache=True)
+    logits = unembed(params["embeds"], h[:, -1])
+    return constrain(logits, "logits"), cache
+
+
+def decode_step(params: Params, cache: Params, tokens: jax.Array,
+                pos: jax.Array, cfg: ModelConfig,
+                ) -> Tuple[jax.Array, Params]:
+    """One decode step.  tokens: [B, 1] int32; pos: scalar int32."""
+    if cfg.encoder is not None:
+        from . import encdec
+        return encdec.encdec_decode_step(params, cache, tokens, pos, cfg)
+    h = embed_tokens(params["embeds"], tokens)
+    h, cache = stack_decode(params, h, cache, pos, cfg)
+    h = apply_norm(cfg.norm, params["final_norm"], h)
+    logits = unembed(params["embeds"], h[:, -1])
+    return constrain(logits, "logits"), cache

@@ -1,0 +1,52 @@
+"""AdamW — the production optimizer for the SPMD training path."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Params
+    nu: Params
+
+
+def adamw_init(params: Params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params))
+
+
+def adamw_update(params: Params, grads: Params, state: AdamWState, *,
+                 lr: float | jax.Array, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 ) -> Tuple[Params, AdamWState]:
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    p_flat, treedef = jax.tree.flatten(params)
+    g_flat = treedef.flatten_up_to(grads)
+    m_flat = treedef.flatten_up_to(state.mu)
+    v_flat = treedef.flatten_up_to(state.nu)
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(p_flat, g_flat, m_flat, v_flat):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * gf
+        v_new = b2 * v + (1 - b2) * jnp.square(gf)
+        delta = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (delta + weight_decay * pf)
+        new_p.append(pf.astype(p.dtype))
+        new_m.append(m_new)
+        new_v.append(v_new)
+    return (jax.tree.unflatten(treedef, new_p),
+            AdamWState(step=step,
+                       mu=jax.tree.unflatten(treedef, new_m),
+                       nu=jax.tree.unflatten(treedef, new_v)))

@@ -1,0 +1,48 @@
+"""Learning-rate schedules, including MiniCPM's WSD (warmup-stable-decay)
+and the paper's step-decay (ResNet-style /10 at fixed epochs)."""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+
+
+def constant_lr(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def wsd_schedule(peak_lr: float, warmup: int, stable: int,
+                 decay: int, *, min_ratio: float = 0.1) -> Callable:
+    """MiniCPM WSD: linear warmup -> constant -> exponential-ish decay."""
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(s / max(warmup, 1), 1.0)
+        in_decay = jnp.clip((s - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        factor = jnp.power(jnp.asarray(min_ratio, jnp.float32), in_decay)
+        return jnp.where(s < warmup + stable, warm, peak_lr * factor)
+    return fn
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, *,
+                    min_ratio: float = 0.1) -> Callable:
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(s / max(warmup, 1), 1.0)
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(math.pi * t))
+        return jnp.where(s < warmup, warm, peak_lr * cos)
+    return fn
+
+
+def step_decay_schedule(base_lr: float, boundaries: Sequence[int],
+                        factor: float = 0.1) -> Callable:
+    """The paper's deep-learning schedule: /10 at epochs 30/60/90 (§7.1)."""
+    def fn(step):
+        s = jnp.asarray(step)
+        mult = jnp.asarray(1.0, jnp.float32)
+        for b in boundaries:
+            mult = jnp.where(s >= b, mult * factor, mult)
+        return base_lr * mult
+    return fn

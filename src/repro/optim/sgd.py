@@ -1,0 +1,55 @@
+"""Momentum SGD matching the paper's server update rule (eq. 2).
+
+    w_{t+1} = w_t + u_t + gamma * (w_t - w_{t-1})
+
+with ``u = -eta * grad`` this is heavy-ball momentum maintained as the
+history ``h = w_t - w_{t-1}`` — exactly the state the paper's replication
+bound (eq. 7/10) reasons over.  The delay-adaptive variant scales eta per
+update by the observed delay (AdaDelay, §3.1).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class MomentumState(NamedTuple):
+    history: Params          # h = w_t - w_{t-1}, f32
+
+
+def momentum_sgd_init(params: Params) -> MomentumState:
+    return MomentumState(history=jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def momentum_sgd_update(params: Params, grads: Params, state: MomentumState,
+                        *, lr: float | jax.Array, gamma: float = 0.9,
+                        weight_decay: float = 0.0,
+                        ) -> Tuple[Params, MomentumState]:
+    """One eq.-2 step.  Gradients may be bf16; state math is f32."""
+    p_flat, treedef = jax.tree.flatten(params)
+    g_flat = treedef.flatten_up_to(grads)
+    h_flat = treedef.flatten_up_to(state.history)
+    new_p, new_h = [], []
+    for p, g, h in zip(p_flat, g_flat, h_flat):
+        gf = g.astype(jnp.float32)
+        if weight_decay:
+            gf = gf + weight_decay * p.astype(jnp.float32)
+        h_new = -lr * gf + gamma * h
+        new_p.append((p.astype(jnp.float32) + h_new).astype(p.dtype))
+        new_h.append(h_new)
+    return (jax.tree.unflatten(treedef, new_p),
+            MomentumState(history=jax.tree.unflatten(treedef, new_h)))
+
+
+def update_norm(grads: Params) -> jax.Array:
+    """||u||_2 over the whole update pytree — the norm workers ship with
+    push() (Table 1) for the scheduler's divergence bound."""
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    return jnp.sqrt(sq)

@@ -1,0 +1,118 @@
+"""MLfabric-A: asynchronous PS training driven by the event simulator.
+
+The simulator decides *when* each worker's update is computed and *in what
+order* updates commit (delay-bounded, network-aware); this trainer supplies
+the *values*: real JAX gradients computed against the stale model the worker
+pulled, applied at the server with eq. 2.  This is the convergence-
+experiment harness behind the paper's Figs. 7(a)-(d) at laptop scale.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..core.network import mb
+from ..core.scheduler import SchedulerConfig
+from ..core.simulator import (BandwidthModel, ClusterSim, CommitRecord,
+                              N_STATIC, StragglerModel, C1)
+from .server import ParameterServer
+from .worker import Worker
+
+Params = Any
+
+
+@dataclass
+class AsyncTrainResult:
+    losses: List[Tuple[float, float]] = field(default_factory=list)  # (time, loss)
+    commits: int = 0
+    drops: int = 0
+    delay_stats: Dict[str, float] = field(default_factory=dict)
+    sim_time: float = 0.0
+
+    @property
+    def final_loss(self) -> float:
+        return self.losses[-1][1] if self.losses else math.inf
+
+
+class AsyncTrainer:
+    """Couples ClusterSim (timing) with real gradient computation."""
+
+    def __init__(self, init_params: Params, loss_fn: Callable, data_fn: Callable,
+                 *, n_workers: int = 8, tau_max: Optional[int] = 30,
+                 base_lr: float = 0.5, gamma: float = 0.9,
+                 delay_adaptive: bool = True, update_size: float = mb(100),
+                 compute_time: float = 0.1,
+                 straggler: StragglerModel = C1,
+                 bandwidth: BandwidthModel = N_STATIC,
+                 aggregators: int = 2, seed: int = 0,
+                 eval_fn: Optional[Callable] = None, has_aux: bool = False):
+        self.server = ParameterServer(init_params, gamma=gamma)
+        self.data_fn = data_fn
+        self.eval_fn = eval_fn
+        self.workers = {
+            f"worker{i}": Worker(f"worker{i}", loss_fn, base_lr=base_lr,
+                                 delay_adaptive=delay_adaptive,
+                                 has_aux=has_aux)
+            for i in range(n_workers)}
+        # the (single) in-flight update payload per worker
+        self._payloads: Dict[str, Tuple[Params, int]] = {}
+        self._t = 0
+
+        agg_hosts = [f"worker{i}" for i in range(min(aggregators, n_workers))]
+        cfg = SchedulerConfig(server="server", aggregators=agg_hosts,
+                              tau_max=tau_max, gamma=gamma, mode="async")
+        self.sim = ClusterSim(
+            n_workers, cfg, update_size=update_size,
+            compute_time=compute_time, straggler=straggler,
+            bandwidth=bandwidth, seed=seed,
+            on_compute=self._on_compute, on_commit=self._on_commit,
+            on_drop=self._on_drop)
+        self.result = AsyncTrainResult()
+
+    # -- simulator callbacks ------------------------------------------------ #
+    # A worker has at most ONE update in flight (it pulls a new model only
+    # after its previous push commits or is dropped), so a single payload
+    # slot per worker is enough.
+    def _on_compute(self, worker: str, version: int) -> Tuple[float, float]:
+        """Simulator asks: worker computes an update against the CURRENT
+        server model (the version it just pulled)."""
+        params, v = self.server.pull()
+        batch = self.data_fn(worker, self._t)
+        self._t += 1
+        w = self.workers[worker]
+        update, norm = w.compute_update(
+            params, batch, version=v, t=self._t,
+            observed_delay=int(self.server.delays.mean) if w.delay_adaptive
+            else 0)
+        assert worker not in self._payloads, f"{worker} already in flight"
+        self._payloads[worker] = (update, v)
+        return mb(100), norm
+
+    def _on_commit(self, rec: CommitRecord) -> None:
+        update, version_used = self._payloads.pop(rec.worker)
+        self.server.push(update, version_used)
+        self.result.commits += 1
+        if self.eval_fn and self.result.commits % 10 == 0:
+            loss = float(self.eval_fn(self.server.params))
+            self.result.losses.append((rec.time, loss))
+
+    def _on_drop(self, worker: str, version: int) -> None:
+        self._payloads.pop(worker, None)  # lost work (paper §5.1.3)
+
+    # -- driver ------------------------------------------------------------- #
+    def run(self, *, until_commits: int = 100,
+            until_time: float = math.inf) -> AsyncTrainResult:
+        sim_res = self.sim.run(until_commits=until_commits,
+                               until_time=until_time)
+        self.result.drops = sim_res.drops
+        self.result.sim_time = sim_res.sim_time
+        self.result.delay_stats = sim_res.delay.summary()
+        if self.eval_fn:
+            loss = float(self.eval_fn(self.server.params))
+            self.result.losses.append((sim_res.sim_time, loss))
+        return self.result

@@ -1,0 +1,65 @@
+"""Parameter server: versioned model + momentum update rule (paper eq. 2).
+
+    w_{t+1} = w_t + u_t^j + gamma * (w_t - w_{t-1})
+
+The server owns: the model pytree, the momentum history ``h`` (the state the
+replication bound reasons over), the version counter, and the delay tracker.
+Updates arrive in scheduler-committed order; each carries the model version
+it was computed from, so the server records the realized delay distribution
+(which MLfabric's ordering narrows — eq. 4).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.delay import DelayTracker
+
+Params = Any
+
+
+class ParameterServer:
+    def __init__(self, params: Params, *, gamma: float = 0.9):
+        self.params = params
+        self.gamma = gamma
+        self.history: Params = jax.tree.map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        self.version = 0
+        self.delays = DelayTracker()
+        self._apply = jax.jit(self._apply_impl)
+
+    def _apply_impl(self, params, history, update):
+        def upd(p, h, u):
+            h_new = u.astype(jnp.float32) + self.gamma * h
+            return (p.astype(jnp.float32) + h_new).astype(p.dtype), h_new
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_h = treedef.flatten_up_to(history)
+        flat_u = treedef.flatten_up_to(update)
+        new_p, new_h = [], []
+        for p, h, u in zip(flat_p, flat_h, flat_u):
+            np_, nh = upd(p, h, u)
+            new_p.append(np_)
+            new_h.append(nh)
+        return (jax.tree.unflatten(treedef, new_p),
+                jax.tree.unflatten(treedef, new_h))
+
+    # ------------------------------------------------------------------ #
+    def pull(self) -> Tuple[Params, int]:
+        """Latest model + its version (the worker records the version)."""
+        return self.params, self.version
+
+    def push(self, update: Params, version_used: int) -> int:
+        """Apply one (possibly aggregated) update; returns new version."""
+        self.delays.record(self.version - version_used)
+        self.params, self.history = self._apply(self.params, self.history,
+                                                update)
+        self.version += 1
+        return self.version
+
+    def history_norm(self) -> float:
+        return float(jnp.sqrt(sum(
+            jnp.sum(jnp.square(h)) for h in jax.tree.leaves(self.history))))

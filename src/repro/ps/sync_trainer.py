@@ -1,0 +1,131 @@
+"""MLfabric-S: synchronous SGD with network-aware aggregation (paper §6).
+
+Per iteration every worker computes a gradient on its mini-batch shard; the
+batch of ready updates is handed to the scheduler in *sync* mode (no
+ordering/dropping — Alg. 3 aggregation only), summed, and applied once.
+``allreduce_via_ps`` realizes the paper's MPI AllReduce API on top of the
+PS primitives: push(root, update) + get(root) with a randomly-chosen root.
+"""
+
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.network import NetworkState, gbps, mb
+from ..core.ordering import Update
+from ..core.scheduler import MLfabricScheduler, SchedulerConfig
+from ..core.simulator import BandwidthModel, N_STATIC, StragglerModel, C1
+from .server import ParameterServer
+
+Params = Any
+
+
+@dataclass
+class SyncIterationStats:
+    compute_time: float
+    comm_time: float
+    n_direct: int
+    n_aggregated: int
+
+
+class SyncTrainer:
+    """Synchronous data-parallel SGD through the MLfabric scheduler."""
+
+    def __init__(self, init_params: Params, loss_fn: Callable,
+                 data_fn: Callable, *, n_workers: int = 8,
+                 base_lr: float = 0.5, gamma: float = 0.9,
+                 update_size: float = mb(100), compute_time: float = 0.1,
+                 straggler: StragglerModel = C1,
+                 bandwidth: BandwidthModel = N_STATIC,
+                 default_bw: float = gbps(10), aggregators: int = 2,
+                 seed: int = 0, has_aux: bool = False):
+        self.server = ParameterServer(init_params, gamma=gamma)
+        self.n_workers = n_workers
+        self.base_lr = base_lr
+        self.data_fn = data_fn
+        self.compute_time = compute_time
+        self.update_size = update_size
+        self.straggler = straggler
+        self.bandwidth = bandwidth
+        self.default_bw = default_bw
+        self.rng = random.Random(seed)
+        scalar = (lambda p, b: loss_fn(p, b)[0]) if has_aux else loss_fn
+        self._grad = jax.jit(jax.grad(scalar))
+        self.agg_hosts = [f"worker{i}" for i in range(min(aggregators,
+                                                          n_workers))]
+        self.cfg = SchedulerConfig(server="server", aggregators=self.agg_hosts,
+                                   gamma=gamma, mode="sync")
+        self.scheduler = MLfabricScheduler(self.cfg)
+        self.stats: List[SyncIterationStats] = []
+        self._step = 0
+
+    def _fresh_network(self) -> NetworkState:
+        hosts = [f"worker{i}" for i in range(self.n_workers)] + ["server"]
+        net = NetworkState(hosts, self.default_bw)
+        for h in hosts[:-1]:
+            net.set_bandwidth(h, 0.0, up=self.bandwidth.sample(self.rng),
+                              down=self.bandwidth.sample(self.rng))
+        return net
+
+    def step(self) -> Tuple[float, SyncIterationStats]:
+        """One synchronous iteration.  Returns (iteration wall time, stats)."""
+        params, version = self.server.pull()
+        # all workers compute on their shard of the global batch
+        grads, norms = [], []
+        compute_times = []
+        for i in range(self.n_workers):
+            batch = self.data_fn(f"worker{i}", self._step)
+            g = self._grad(params, batch)
+            grads.append(g)
+            norms.append(float(jnp.sqrt(sum(
+                jnp.sum(jnp.square(x.astype(jnp.float32)))
+                for x in jax.tree.leaves(g)))))
+            compute_times.append(self.compute_time
+                                 * self.straggler.sample(self.rng))
+        t_compute = max(compute_times)   # sync: slowest worker gates
+
+        # schedule the batch of ready updates through Alg. 3
+        updates = [Update(uid=i, worker=f"worker{i}", size=self.update_size,
+                          version=version, norm=norms[i], t_avail=compute_times[i])
+                   for i in range(self.n_workers)]
+        plan = self.scheduler.schedule_batch(updates, self._fresh_network(),
+                                             t_now=0.0)
+        t_comm = plan.makespan - t_compute if plan.makespan > t_compute else \
+            plan.makespan
+        n_agg = sum(1 for g in plan.aggregation.assignment.values() if g != 0)
+
+        # apply the summed update (aggregation is a weighted sum -> the
+        # server sees one combined update per iteration)
+        mean_grad = jax.tree.map(
+            lambda *gs: sum(g.astype(jnp.float32) for g in gs) / len(gs),
+            *grads)
+        update = jax.tree.map(lambda g: -self.base_lr * g, mean_grad)
+        self.server.push(update, version)
+        self._step += 1
+
+        stats = SyncIterationStats(compute_time=t_compute,
+                                   comm_time=max(t_comm, 0.0),
+                                   n_direct=plan.aggregation.n_direct,
+                                   n_aggregated=n_agg)
+        self.stats.append(stats)
+        return plan.makespan, stats
+
+    def run(self, n_iterations: int) -> List[SyncIterationStats]:
+        for _ in range(n_iterations):
+            self.step()
+        return self.stats
+
+
+def allreduce_via_ps(updates: List[Params], *, seed: int = 0) -> Params:
+    """The paper's AllReduce API (§6): push all updates to a randomly-chosen
+    root (acting as the aggregation-tree root) and read back the sum."""
+    rng = random.Random(seed)
+    root = rng.randrange(len(updates))  # noqa: F841 (root choice is nominal)
+    return jax.tree.map(lambda *xs: sum(x.astype(jnp.float32) for x in xs),
+                        *updates)

@@ -1,0 +1,49 @@
+"""Worker: computes gradient updates against a (stale) pulled model (eq. 1).
+
+    u_t^j = -eta * dL(D_j, w_{t-tau})/dw   (+ regularization)
+
+The delay-adaptive learning rate (AdaDelay, §3.1) is applied at the worker
+when enabled; the update's norm is computed here and shipped with push()
+(Table 1) for the scheduler's divergence bound.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.delay import adadelay_lr
+from ..optim.sgd import update_norm
+
+Params = Any
+
+
+class Worker:
+    def __init__(self, worker_id: str, loss_fn: Callable, *,
+                 base_lr: float = 0.1, delay_adaptive: bool = False,
+                 weight_decay: float = 0.0, has_aux: bool = False):
+        self.worker_id = worker_id
+        self.base_lr = base_lr
+        self.delay_adaptive = delay_adaptive
+        self.weight_decay = weight_decay
+        scalar_loss = (lambda p, b: loss_fn(p, b)[0]) if has_aux else loss_fn
+        self._grad = jax.jit(jax.grad(scalar_loss))
+        self._loss_fn = loss_fn
+
+    def compute_update(self, params: Params, batch: Dict[str, Any], *,
+                       version: int, t: int, observed_delay: int = 0,
+                       ) -> Tuple[Params, float]:
+        """Returns (update pytree u = -eta*grad, ||u||)."""
+        grads = self._grad(params, batch)
+        if self.delay_adaptive:
+            eta = adadelay_lr(self.base_lr, max(t, 1), observed_delay)
+        else:
+            eta = self.base_lr
+        update = jax.tree.map(
+            lambda g, p: (-eta * (g.astype(jnp.float32)
+                                  + self.weight_decay
+                                  * p.astype(jnp.float32))).astype(jnp.float32),
+            grads, params)
+        return update, float(update_norm(update))

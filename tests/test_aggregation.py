@@ -1,0 +1,113 @@
+"""Tests for Alg. 3 (in-network aggregation) and §10.3 (distribution)."""
+
+import pytest
+
+from repro.core.aggregation import aggregate_updates, plan_distribution
+from repro.core.network import NetworkState
+from repro.core.ordering import Update
+
+
+def make_net(workers, server_bw=100.0, extra=()):
+    net = NetworkState([], default_bw=server_bw)
+    net.add_host("s", server_bw)
+    for w in workers:
+        net.add_host(w, server_bw)
+    for h in extra:
+        net.add_host(h, server_bw)
+    return net
+
+
+def updates(sizes, t_avail=0.0):
+    return [Update(uid=i, worker=f"w{i}", size=s, version=0, t_avail=t_avail)
+            for i, s in enumerate(sizes)]
+
+
+class TestAggregation:
+    def test_fig2_aggregation_helps(self):
+        """Paper Fig. 2: 4 equal updates, server downlink bottleneck.
+        Direct time-sharing commits the last at t4; routing g3,g4 through an
+        aggregator commits everything strictly earlier."""
+        ups = updates([100.0] * 4)
+        net = make_net([u.worker for u in ups], extra=["agg"])
+        direct = aggregate_updates(ups, net.copy(), "s", [], t_now=0.0)
+        assert direct.makespan == pytest.approx(4.0)  # serialized 1,2,3,4
+        agg = aggregate_updates(ups, net.copy(), "s", ["agg"], t_now=0.0)
+        assert agg.makespan < direct.makespan - 1e-9
+        # paper's pattern: 2 direct, 2 aggregated -> aggregate arrives at t3
+        assert agg.makespan == pytest.approx(3.0)
+        assert agg.n_direct == 2
+
+    def test_constraint_server_never_fallow(self):
+        """Members of aggregator group i (beyond the first) must finish
+        aggregating no later than the previous groups' server arrival."""
+        ups = updates([100.0, 100.0, 100.0, 100.0, 100.0, 100.0])
+        net = make_net([u.worker for u in ups], extra=["a1", "a2"])
+        res = aggregate_updates(ups, net, "s", ["a1", "a2"])
+        t_blocked = 0.0
+        for grp in res.groups:
+            if grp.aggregator is None:
+                if grp.member_transfers:
+                    t_blocked = max(t.t_end for t in grp.member_transfers)
+            else:
+                arrivals = [t.t_end for t in grp.member_transfers]
+                for arr in arrivals[1:]:
+                    assert arr <= t_blocked + 1e-9
+                if grp.aggregate_transfer is not None:
+                    t_blocked = grp.aggregate_transfer.t_end
+
+    def test_aggregation_never_worse_than_direct(self):
+        import random
+        rng = random.Random(7)
+        for _ in range(20):
+            n = rng.randint(1, 7)
+            ups = updates([rng.uniform(10, 300) for _ in range(n)])
+            net = make_net([u.worker for u in ups], extra=["a1", "a2"])
+            direct = aggregate_updates(ups, net.copy(), "s", [])
+            agg = aggregate_updates(ups, net.copy(), "s", ["a1", "a2"])
+            assert agg.makespan <= direct.makespan + 1e-9
+
+    def test_order_preserved_within_commits(self):
+        """Commit times are non-decreasing in the given order (the paper's
+        ordering invariant: aggregation must not re-order updates)."""
+        ups = updates([50.0, 120.0, 80.0, 200.0, 60.0])
+        net = make_net([u.worker for u in ups], extra=["a1"])
+        res = aggregate_updates(ups, net, "s", ["a1"])
+        commits = [res.commit_times[u.uid] for u in ups]
+        assert commits == sorted(commits)
+
+    def test_empty_batch(self):
+        net = make_net(["w0"])
+        res = aggregate_updates([], net, "s", [])
+        assert res.makespan == 0.0
+        assert res.assignment == {}
+
+    def test_aggregate_size_is_single_update(self):
+        """Summed gradients keep the tensor size: |r| < |g3| + |g4| (§3.2)."""
+        ups = updates([100.0] * 4)
+        net = make_net([u.worker for u in ups], extra=["agg"])
+        res = aggregate_updates(ups, net, "s", ["agg"])
+        for grp in res.groups:
+            if grp.aggregator is not None and grp.aggregate_transfer:
+                assert grp.aggregate_transfer.size == pytest.approx(100.0)
+
+    def test_bytes_to_server_reduced(self):
+        ups = updates([100.0] * 6)
+        net = make_net([u.worker for u in ups], extra=["a1", "a2"])
+        res = aggregate_updates(ups, net, "s", ["a1", "a2"])
+        server_bytes = sum(
+            (grp.aggregate_transfer.size if grp.aggregator is not None
+             else sum(t.size for t in grp.member_transfers))
+            for grp in res.groups if grp.members or grp.member_transfers)
+        assert server_bytes < 600.0  # aggregation reduced server load
+
+
+class TestDistribution:
+    def test_model_distribution_tree(self):
+        """§10.3: distributing the model through distributors beats serving
+        every request from the server's uplink."""
+        workers = [f"w{i}" for i in range(6)]
+        net = make_net(workers, extra=["d1", "d2"])
+        times = plan_distribution(100.0, workers, net.copy(), "s", ["d1", "d2"])
+        assert set(times) == set(workers)
+        direct_times = plan_distribution(100.0, workers, net.copy(), "s", [])
+        assert max(times.values()) <= max(direct_times.values()) + 1e-9

@@ -1,0 +1,133 @@
+"""Per-architecture smoke tests: reduced config, one forward/train/decode
+step on CPU, asserting output shapes and no NaNs (assignment requirement)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_configs
+from repro.models import build_model, cache_specs, input_specs
+from repro.models.api import text_len
+
+ARCHS = list(list_configs())
+BATCH, SEQ = 2, 64
+
+
+def make_batch(cfg, rng, batch=BATCH, seq=SEQ, labels=True):
+    st = text_len(cfg, seq)
+    data = {"tokens": jax.random.randint(rng, (batch, st), 0,
+                                         cfg.vocab_size, dtype=jnp.int32)}
+    if labels:
+        data["labels"] = jax.random.randint(rng, (batch, st), 0,
+                                            cfg.vocab_size, dtype=jnp.int32)
+    if cfg.frontend == "vision":
+        data["frontend_embeds"] = jax.random.normal(
+            rng, (batch, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.frontend == "audio":
+        data["frontend_embeds"] = jax.random.normal(
+            rng, (batch, cfg.encoder.n_frames, cfg.d_model), jnp.bfloat16)
+    return data
+
+
+@pytest.fixture(scope="module")
+def built():
+    """Build + init each reduced arch once per test session."""
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = get_config(arch).reduced()
+            model = build_model(cfg)
+            params = model.init(jax.random.key(0))
+            cache[arch] = (cfg, model, params)
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch, built):
+    cfg, model, params = built(arch)
+    batch = make_batch(cfg, jax.random.key(1))
+    (loss, metrics), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(
+        params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch}: loss={loss}"
+    # gradient pytree matches params and is finite on a sample leaf
+    leaves = jax.tree.leaves(grads)
+    assert len(leaves) == len(jax.tree.leaves(params))
+    gnorm = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+                for g in leaves)
+    assert np.isfinite(gnorm) and gnorm > 0.0, f"{arch}: grad norm {gnorm}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_smoke(arch, built):
+    cfg, model, params = built(arch)
+    batch = make_batch(cfg, jax.random.key(2), labels=False)
+    logits, cache = model.prefill(params, batch)
+    assert logits.shape == (BATCH, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    # decode: start from a fresh cache sized for SEQ + a few steps
+    dec_cache = model.init_cache(BATCH, SEQ + 8)
+    if cfg.encoder is not None:
+        dec_cache["cross_kv"] = cache["cross_kv"]
+    tok = jnp.full((BATCH, 1), 3, jnp.int32)
+    for step in range(2):
+        logits, dec_cache = model.decode_step(params, dec_cache, tok,
+                                              jnp.asarray(step, jnp.int32))
+        assert logits.shape == (BATCH, cfg.padded_vocab)
+        assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32)))), arch
+        tok = jnp.argmax(logits, -1, keepdims=True).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_prefill(arch, built):
+    """Teacher-forced decode of a short sequence gives (approximately) the
+    same final-position logits as prefill over the full sequence — the
+    consistency invariant between the two code paths."""
+    cfg, model, params = built(arch)
+    if cfg.encoder is not None:
+        pytest.skip("enc-dec positions are checked in test_whisper_paths")
+    if cfg.moe is not None:
+        # capacity drops differ between prefill chunks and single-token
+        # decode; use a drop-free capacity factor for the consistency check
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(
+                cfg.moe, capacity_factor=float(cfg.moe.n_experts)))
+        model = build_model(cfg)
+    seq = 8
+    rng = jax.random.key(3)
+    batch = make_batch(cfg, rng, seq=seq, labels=False)
+    logits_pre, _ = model.prefill(params, batch)
+
+    dec_cache = model.init_cache(BATCH, seq)
+    toks = batch["tokens"]
+    if cfg.frontend == "vision":
+        pytest.skip("vision prefix offsets positions; covered by smoke test")
+    logits = None
+    for step in range(toks.shape[1]):
+        logits, dec_cache = model.decode_step(
+            params, dec_cache, toks[:, step:step + 1],
+            jnp.asarray(step, jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(logits, np.float32), np.asarray(logits_pre, np.float32),
+        rtol=0.15, atol=0.35)
+
+
+def test_input_specs_cover_all_cells():
+    from repro.configs import SHAPES, applicable
+    from repro.models import input_specs as specs_fn
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, _ = applicable(cfg, shape)
+            if not ok:
+                continue
+            specs = specs_fn(cfg, shape)
+            assert "tokens" in specs or "cache" in specs
+            for leaf in jax.tree.leaves(specs):
+                assert isinstance(leaf, jax.ShapeDtypeStruct)

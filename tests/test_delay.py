@@ -1,0 +1,98 @@
+"""Tests for delay management (§3.1, eq. 4) and property-based invariants."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.delay import (DelayTracker, adadelay_lr, bounded_delay_lr,
+                              convergence_bound)
+from repro.core.network import Timeline
+from repro.core.replication import divergence_bound
+
+
+class TestDelayRules:
+    def test_adadelay_shrinks_with_delay(self):
+        assert adadelay_lr(1.0, 10, 20) < adadelay_lr(1.0, 10, 5)
+
+    def test_bounded_delay_conservative(self):
+        """[7]'s worst-case rule is never larger than AdaDelay's per-update
+        rule at the same tau when tau_max >= tau + t... sanity ordering."""
+        assert bounded_delay_lr(1.0, 100, 50) <= adadelay_lr(1.0, 100, 50)
+
+    def test_eq4_smaller_eps_better(self):
+        """Eq. 4 monotonicity: narrowing the delay distribution (smaller
+        eps at the same mean) tightens the convergence bound — the paper's
+        central claim for network-based ordering."""
+        for t in (10, 100, 10000):
+            bounds = [convergence_bound(t, tau_bar=30, eps=e)
+                      for e in (0.0, 5.0, 15.0, 30.0)]
+            assert bounds == sorted(bounds)
+
+    def test_eq4_decays_in_t(self):
+        assert convergence_bound(10000, 30, 5) < convergence_bound(100, 30, 5)
+
+
+class TestDelayTracker:
+    def test_stats(self):
+        d = DelayTracker()
+        for tau in (2, 4, 6):
+            d.record(tau)
+        assert d.mean == 4.0
+        assert d.max == 6
+        assert d.half_width == 2.0
+        assert d.variance == pytest.approx(8.0 / 3.0)
+
+
+# --------------------------------------------------------------------------- #
+# hypothesis property tests on core invariants
+# --------------------------------------------------------------------------- #
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.floats(0.1, 100.0), st.floats(0.1, 100.0)),
+                min_size=1, max_size=6),
+       st.floats(0.0, 50.0), st.floats(0.1, 1000.0))
+def test_timeline_consume_monotone(segs, t0, size):
+    """time_to_consume is monotone in size and >= start time."""
+    tl = Timeline(1.0)
+    t = 0.0
+    for dur, rate in segs:
+        tl.set_rate_from(t, rate)
+        t += dur
+    t1 = tl.time_to_consume(t0, size)
+    t2 = tl.time_to_consume(t0, size * 2)
+    assert t1 >= t0
+    assert t2 >= t1
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(0.0, 10.0), st.floats(0.0, 20.0), st.floats(5.0, 30.0),
+       st.floats(0.1, 10.0))
+def test_timeline_reserve_release_identity(a, b, rate, res_rate):
+    tl = Timeline(rate + res_rate)
+    lo, hi = min(a, b), max(a, b) + 0.1
+    before = [(t, r) for t, r in zip(tl.times, tl.rates)]
+    tl.add(lo, hi, -res_rate)
+    tl.add(lo, hi, res_rate)
+    after = [(t, r) for t, r in zip(tl.times, tl.rates)]
+    for (t1, r1), (t2, r2) in zip(before, after):
+        assert t1 == pytest.approx(t2)
+        assert r1 == pytest.approx(r2)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(0.0, 1.0), st.floats(0.0, 10.0),
+       st.lists(st.floats(0.0, 5.0), min_size=0, max_size=8))
+def test_divergence_bound_nonneg_monotone(gamma, h_norm, norms):
+    """Divergence bound is non-negative and monotone in the pending set."""
+    b = divergence_bound(h_norm, norms, gamma)
+    assert b >= 0.0
+    assert divergence_bound(h_norm, norms + [1.0], gamma) >= b
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 100000), st.floats(1.0, 100.0), st.floats(0.0, 1.0))
+def test_eq4_eps_monotonicity_property(t, tau_bar, frac):
+    eps_small = frac * tau_bar * 0.5
+    eps_large = frac * tau_bar * 0.5 + tau_bar * 0.5
+    assert (convergence_bound(t, tau_bar, eps_small)
+            <= convergence_bound(t, tau_bar, eps_large) + 1e-12)

@@ -1,0 +1,103 @@
+"""MoE layer unit tests + stale-synchronous (§6) comparison tests."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.moe import capacity, init_moe, moe_forward, _dispatch_chunk
+from repro.ps.stale_sync import StaleSyncSim, compare_ssp_mlfabric
+
+
+class TestMoE:
+    @pytest.fixture()
+    def setup(self):
+        cfg = get_config("granite-moe-1b-a400m").reduced()
+        params = init_moe(jax.random.key(0), cfg)
+        x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model),
+                              jnp.bfloat16)
+        return cfg, params, x
+
+    def test_output_shape_and_finite(self, setup):
+        cfg, params, x = setup
+        out, aux = moe_forward(params, x, cfg)
+        assert out.shape == x.shape
+        assert np.isfinite(np.asarray(out, np.float32)).all()
+        assert float(aux) > 0.0
+
+    def test_capacity_formula(self):
+        moe = get_config("deepseek-v2-236b").moe
+        # 256 tokens, top-6 of 160 experts, cf 1.25 -> ceil(256*6/160*1.25)=12
+        assert capacity(256, moe) == 12
+
+    def test_dispatch_respects_capacity(self, setup):
+        cfg, params, x = setup
+        moe = cfg.moe
+        probs = jax.nn.softmax(
+            jax.random.normal(jax.random.key(2), (2, 16, moe.n_experts)), -1)
+        cap = capacity(16, moe)
+        dispatch, combine = _dispatch_chunk(x, probs, moe, cap)
+        # per (batch, expert, slot): at most one token
+        slot_load = np.asarray(jnp.sum(dispatch, axis=1))
+        assert (slot_load <= 1 + 1e-6).all()
+        # per (batch, expert): at most `cap` tokens kept
+        expert_load = np.asarray(jnp.sum(dispatch, axis=(1, 3)))
+        assert (expert_load <= cap + 1e-6).all()
+
+    def test_combine_weights_normalized(self, setup):
+        cfg, params, x = setup
+        moe = cfg.moe
+        probs = jax.nn.softmax(
+            jax.random.normal(jax.random.key(3), (2, 16, moe.n_experts)), -1)
+        cap = capacity(16, moe) + 16  # ample capacity: nothing dropped
+        dispatch, combine = _dispatch_chunk(x, probs, moe, cap)
+        totals = np.asarray(jnp.sum(combine, axis=(2, 3)))  # [B, T]
+        np.testing.assert_allclose(totals, 1.0, rtol=1e-3)
+
+    def test_shared_expert_always_on(self):
+        cfg = get_config("deepseek-v2-236b").reduced()
+        params = init_moe(jax.random.key(0), cfg)
+        assert "shared" in params
+        x = jnp.zeros((1, 8, cfg.d_model), jnp.bfloat16)
+        out, _ = moe_forward(params, x, cfg)
+        assert out.shape == x.shape
+
+    def test_chunked_equals_unchunked(self, setup):
+        cfg, params, x = setup
+        big = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe,
+                                         capacity_factor=float(cfg.moe.n_experts)))
+        out1, _ = moe_forward(params, x, big, chunk=8)
+        out2, _ = moe_forward(params, x, big, chunk=16)
+        np.testing.assert_allclose(np.asarray(out1, np.float32),
+                                   np.asarray(out2, np.float32),
+                                   rtol=3e-2, atol=3e-2)
+
+
+class TestStaleSync:
+    def test_ssp_halts_under_slow_worker(self):
+        """A 4x-slow worker creates barrier idle time in SSP."""
+        from repro.core.simulator import StragglerModel
+        slow = StragglerModel(prob=0.125, factor=4.0)
+        res = StaleSyncSim(8, k=2, straggler=slow, seed=0).run(30)
+        assert res.halt_time > 0.0
+
+    def test_mlfabric_matches_staleness_without_halting(self):
+        """Paper §6: same staleness bound, no barrier halts, faster."""
+        cmp = compare_ssp_mlfabric(n_workers=8, k=2, slow_factor=4.0,
+                                   n_iterations=20, seed=1)
+        assert cmp["mlfabric_max_delay"] <= cmp["staleness_bound"]
+        assert cmp["ssp_halt_time"] > 0.0
+
+    def test_aggregation_helps_ssp(self):
+        """§6: MLfabric's in-network aggregation also speeds SSP itself."""
+        from repro.core.simulator import StragglerModel
+        s = StragglerModel(0, 1)
+        plain = StaleSyncSim(8, k=2, straggler=s, aggregate=False,
+                             seed=2).run(30)
+        agg = StaleSyncSim(8, k=2, straggler=s, aggregate=True,
+                           seed=2).run(30)
+        assert agg.sim_time < plain.sim_time

@@ -1,0 +1,137 @@
+"""Unit tests for the time-varying network model (paper Fig. 4)."""
+
+import math
+
+import pytest
+
+from repro.core.network import (NetworkState, Profile, Timeline, gbps,
+                                make_profile, mb)
+
+
+class TestTimeline:
+    def test_constant_rate(self):
+        tl = Timeline(10.0)
+        assert tl.rate_at(0.0) == 10.0
+        assert tl.rate_at(100.0) == 10.0
+        assert tl.integrate(0, 5) == 50.0
+
+    def test_set_rate_from(self):
+        tl = Timeline(10.0)
+        tl.set_rate_from(5.0, 2.0)
+        assert tl.rate_at(4.999) == 10.0
+        assert tl.rate_at(5.0) == 2.0
+        assert tl.integrate(0, 10) == 50.0 + 10.0
+
+    def test_time_to_consume_simple(self):
+        tl = Timeline(10.0)
+        assert tl.time_to_consume(0.0, 100.0) == pytest.approx(10.0)
+        assert tl.time_to_consume(3.0, 100.0) == pytest.approx(13.0)
+
+    def test_time_to_consume_across_breakpoints(self):
+        tl = Timeline(10.0)
+        tl.set_rate_from(5.0, 1.0)
+        # 50 bytes in first 5s, then 1 B/s
+        assert tl.time_to_consume(0.0, 60.0) == pytest.approx(15.0)
+
+    def test_time_to_consume_with_gap(self):
+        tl = Timeline(10.0)
+        tl.add(2.0, 4.0, -10.0)  # dead zone [2,4)
+        assert tl.rate_at(3.0) == 0.0
+        # 20 bytes by t=2, stall until 4, 20 more by t=6
+        assert tl.time_to_consume(0.0, 40.0) == pytest.approx(6.0)
+
+    def test_never_finishes(self):
+        tl = Timeline(0.0)
+        assert tl.time_to_consume(0.0, 1.0) == math.inf
+
+    def test_add_release_roundtrip(self):
+        tl = Timeline(10.0)
+        tl.add(1.0, 3.0, -4.0)
+        tl.add(1.0, 3.0, 4.0)
+        assert tl.rate_at(2.0) == pytest.approx(10.0)
+        assert len(tl.times) == 1  # coalesced back to constant
+
+    def test_over_reservation_raises(self):
+        tl = Timeline(1.0)
+        with pytest.raises(ValueError):
+            tl.add(0.0, 1.0, -5.0)
+
+    def test_minimum(self):
+        a = Timeline(10.0)
+        a.set_rate_from(5.0, 1.0)
+        b = Timeline(4.0)
+        m = Timeline.minimum([a, b])
+        assert m.rate_at(0.0) == 4.0
+        assert m.rate_at(6.0) == 1.0
+
+
+class TestMakeProfile:
+    def test_fig4b_shape(self):
+        """Paper Fig. 4(b): 30 MB over a varying residual finishing at t=7."""
+        residual = Timeline(0.0)
+        # residual: 10 MB/s in [0,2), 0 in [2,3), 5 in [3,5), 0 in [5,6), 10 after
+        residual.set_rate_from(0.0, 10.0)
+        residual.set_rate_from(2.0, 0.0)
+        residual.set_rate_from(3.0, 5.0)
+        residual.set_rate_from(5.0, 0.0)
+        residual.set_rate_from(6.0, 10.0)
+        prof = make_profile(residual, 0.0, 30.0)
+        assert prof is not None
+        # capacity: [0,2) -> 20 bytes, [3,5) -> 10 bytes => done exactly at t=5
+        assert prof.t_end == pytest.approx(5.0)
+        assert prof.size == pytest.approx(30.0)
+
+    def test_profile_size_matches(self):
+        residual = Timeline(7.0)
+        prof = make_profile(residual, 1.0, 21.0)
+        assert prof.size == pytest.approx(21.0)
+        assert prof.t_start == pytest.approx(1.0)
+        assert prof.t_end == pytest.approx(4.0)
+
+
+class TestNetworkState:
+    def test_reserve_serializes_transfers(self):
+        """Two transfers to one server share its downlink: maximal-rate
+        reservation serializes them (network time-sharing, §3.1.1)."""
+        net = NetworkState(["w1", "w2", "s"], default_bw=10.0)
+        t1 = net.reserve("w1", "s", 100.0, 0.0)
+        assert t1.t_end == pytest.approx(10.0)
+        t2 = net.reserve("w2", "s", 100.0, 0.0)
+        assert t2.t_end == pytest.approx(20.0)  # waits for downlink
+
+    def test_parallel_paths_dont_interfere(self):
+        net = NetworkState(["w1", "w2", "s", "a"], default_bw=10.0)
+        t1 = net.reserve("w1", "s", 100.0, 0.0)
+        t2 = net.reserve("w2", "a", 100.0, 0.0)  # different destination
+        assert t1.t_end == pytest.approx(10.0)
+        assert t2.t_end == pytest.approx(10.0)
+
+    def test_release_restores(self):
+        net = NetworkState(["w", "s"], default_bw=10.0)
+        tr = net.reserve("w", "s", 50.0, 0.0)
+        net.release(tr)
+        assert net.transfer_time("w", "s", 50.0, 0.0) == pytest.approx(5.0)
+
+    def test_bottleneck_is_min_of_up_down(self):
+        net = NetworkState(["w", "s"], default_bw=10.0)
+        net.set_bandwidth("w", 0.0, up=2.0)
+        assert net.transfer_time("w", "s", 20.0, 0.0) == pytest.approx(10.0)
+
+    def test_bandwidth_change_mid_transfer(self):
+        net = NetworkState(["w", "s"], default_bw=10.0)
+        net.set_bandwidth("w", 5.0, up=1.0)  # drops to 1 B/s at t=5
+        # 60 bytes: 50 in first 5 s, 10 more at 1 B/s -> t=15
+        assert net.transfer_time("w", "s", 60.0, 0.0) == pytest.approx(15.0)
+
+    def test_copy_isolation(self):
+        net = NetworkState(["w", "s"], default_bw=10.0)
+        c = net.copy()
+        c.reserve("w", "s", 100.0, 0.0)
+        assert net.transfer_time("w", "s", 10.0, 0.0) == pytest.approx(1.0)
+
+    def test_units(self):
+        assert gbps(10) == pytest.approx(1.25e9)
+        assert mb(100) == pytest.approx(1e8)
+        # 100 MB over 10 Gbps = 80 ms (paper §2 arithmetic)
+        net = NetworkState(["w", "s"], default_bw=gbps(10))
+        assert net.transfer_time("w", "s", mb(100), 0.0) == pytest.approx(0.08)

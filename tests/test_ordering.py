@@ -1,0 +1,127 @@
+"""Tests for Alg. 2 (update ordering): SJF, deadlines, drop rule (§5.1)."""
+
+import pytest
+
+from repro.core.network import NetworkState
+from repro.core.ordering import (Update, assign_deadlines, order_updates,
+                                 order_updates_multiserver, shortest_update)
+
+
+def make_net(workers, server_bw=100.0, worker_bw=None):
+    net = NetworkState([], default_bw=server_bw)
+    net.add_host("s", server_bw)
+    for i, w in enumerate(workers):
+        bw = worker_bw[i] if worker_bw else server_bw
+        net.add_host(w, bw)
+    return net
+
+
+class TestShortestFirst:
+    def test_sjf_order_by_size(self):
+        """§5.1.1: small updates go first -> minimal average completion."""
+        net = make_net(["w1", "w2", "w3"])
+        ups = [Update(uid=i, worker=f"w{i+1}", size=s, version=0)
+               for i, s in enumerate([300.0, 100.0, 200.0])]
+        res = order_updates(ups, net, "s")
+        assert [u.size for u in res.order] == [100.0, 200.0, 300.0]
+        # serialized on the 100 B/s server downlink: 1, 3, 6 s
+        ends = sorted(t.t_end for t in res.transfers.values())
+        assert ends == pytest.approx([1.0, 3.0, 6.0])
+        assert res.avg_completion == pytest.approx(10.0 / 3.0)
+
+    def test_sjf_accounts_for_slow_uplink(self):
+        """A small update behind a slow uplink is not necessarily first."""
+        net = make_net(["w1", "w2"], worker_bw=[1.0, 100.0])
+        ups = [Update(uid=0, worker="w1", size=50.0, version=0),    # 50 s
+               Update(uid=1, worker="w2", size=400.0, version=0)]   # 4 s
+        res = order_updates(ups, net, "s")
+        assert [u.uid for u in res.order] == [1, 0]
+
+    def test_avg_completion_beats_arrival_order(self):
+        """SJF avg completion <= reverse (worst) order on a shared downlink."""
+        net = make_net(["w1", "w2", "w3"])
+        sizes = [500.0, 50.0, 200.0]
+        ups = [Update(uid=i, worker=f"w{i+1}", size=s, version=0)
+               for i, s in enumerate(sizes)]
+        sjf = order_updates([u for u in ups], net.copy(), "s")
+        # worst case: largest first
+        worst_net = net.copy()
+        total, done = 0.0, 0.0
+        for u in sorted(ups, key=lambda u: -u.size):
+            tr = worst_net.reserve(u.worker, "s", u.size, 0.0)
+            total += tr.t_end
+        assert sjf.avg_completion <= total / len(ups) + 1e-9
+
+
+class TestDeadlines:
+    def test_deadline_assignment_eq9(self):
+        ups = [Update(uid=0, worker="w", size=1.0, version=7)]
+        assign_deadlines(ups, tau_max=30, v_init=10)
+        assert ups[0].deadline == 7 + 30 - 10
+
+    def test_deadline_pick_overrides_sjf(self):
+        """An update with dl=1 goes first even if larger — and is NOT
+        dropped, because at equal bandwidths it saturates the server
+        downlink (nothing is fallow: the next pick cannot finish earlier)."""
+        net = make_net(["w1", "w2"])
+        ups = [Update(uid=0, worker="w1", size=500.0, version=-4),  # older
+               Update(uid=1, worker="w2", size=10.0, version=0)]
+        res = order_updates(ups, net, "s", tau_max=5, v_init=0)
+        assert [u.uid for u in res.order] == [0, 1]
+        assert not res.dropped
+
+    def test_deadline_met_when_not_droppable(self):
+        """If the deadline pick is also fastest, it simply goes first."""
+        net = make_net(["w1", "w2"])
+        ups = [Update(uid=0, worker="w1", size=10.0, version=-4),
+               Update(uid=1, worker="w2", size=500.0, version=0)]
+        res = order_updates(ups, net, "s", tau_max=5, v_init=0)
+        assert [u.uid for u in res.order] == [0, 1]
+        assert not res.dropped
+
+    def test_paper_5_1_3_drop_example(self):
+        """The worked example of §5.1.3: g1 behind a 10 B/s uplink with
+        dl=1 is dropped; g2 is scheduled immediately at full rate."""
+        net = make_net(["w1", "w2"], server_bw=100.0, worker_bw=[10.0, 100.0])
+        g1 = Update(uid=1, worker="w1", size=100.0, version=-4)  # dl = 1
+        g2 = Update(uid=2, worker="w2", size=100.0, version=0)   # dl = 5
+        res = order_updates([g1, g2], net, "s", tau_max=5, v_init=0)
+        assert [u.uid for u in res.dropped] == [1]
+        assert [u.uid for u in res.order] == [2]
+        assert res.transfers[2].t_end == pytest.approx(1.0)  # full 100 B/s
+
+
+class TestDelayBoundProperty:
+    def test_positions_respect_unique_deadlines(self):
+        """Non-dropped updates with distinct deadlines are applied at a
+        position <= their deadline (the delay-bound guarantee, §5.1.2)."""
+        import random
+        rng = random.Random(42)
+        for trial in range(25):
+            n = rng.randint(2, 8)
+            net = make_net([f"w{i}" for i in range(n)],
+                           worker_bw=[rng.choice([10.0, 50.0, 100.0])
+                                      for _ in range(n)])
+            versions = rng.sample(range(-10, 0), n)
+            ups = [Update(uid=i, worker=f"w{i}",
+                          size=rng.uniform(10, 500), version=versions[i])
+                   for i in range(n)]
+            res = order_updates(ups, net, "s", tau_max=11, v_init=0)
+            for pos, u in enumerate(res.order, start=1):
+                assert pos <= u.deadline, (trial, pos, u)
+
+
+class TestMultiServer:
+    def test_components_reserved_jointly(self):
+        """§10.2: all shards of an update are reserved together; uniform
+        update rate across model shards."""
+        net = make_net(["w1", "w2"])
+        net.add_host("s2", 100.0)
+        ups = [Update(uid=0, worker="w1", size=0.0, version=0),
+               Update(uid=1, worker="w2", size=0.0, version=0)]
+        res = order_updates_multiserver(
+            ups, {"s": 100.0, "s2": 200.0}, net, ["s", "s2"])
+        assert len(res.transfers) == 4  # 2 updates x 2 components
+        # both servers see both updates (uniform rate)
+        dsts = [t.dst for t in res.transfers.values()]
+        assert dsts.count("s") == 2 and dsts.count("s2") == 2

@@ -1,0 +1,97 @@
+"""Hypothesis property tests over the scheduling invariants (system-level)."""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.aggregation import aggregate_updates
+from repro.core.network import NetworkState
+from repro.core.ordering import Update, order_updates
+from repro.core.scheduler import MLfabricScheduler, SchedulerConfig
+
+
+@st.composite
+def cluster_and_updates(draw):
+    n = draw(st.integers(2, 7))
+    sizes = draw(st.lists(st.floats(10.0, 500.0), min_size=n, max_size=n))
+    bws = draw(st.lists(st.sampled_from([10.0, 50.0, 100.0]),
+                        min_size=n, max_size=n))
+    versions = draw(st.lists(st.integers(-5, 0), min_size=n, max_size=n))
+    t_avail = draw(st.lists(st.floats(0.0, 2.0), min_size=n, max_size=n))
+    net = NetworkState([], default_bw=100.0)
+    net.add_host("s", 100.0)
+    net.add_host("a1", 100.0)
+    ups = []
+    for i in range(n):
+        net.add_host(f"w{i}", bws[i])
+        ups.append(Update(uid=i, worker=f"w{i}", size=sizes[i],
+                          version=versions[i], norm=1.0, t_avail=t_avail[i]))
+    return net, ups
+
+
+@settings(max_examples=40, deadline=None)
+@given(cluster_and_updates())
+def test_ordering_partition_invariant(setup):
+    """Every update is either committed or dropped — never lost."""
+    net, ups = setup
+    res = order_updates(list(ups), net, "s", tau_max=8, v_init=0)
+    uids = sorted(u.uid for u in res.order) + sorted(u.uid
+                                                     for u in res.dropped)
+    assert sorted(uids) == sorted(u.uid for u in ups)
+
+
+@settings(max_examples=40, deadline=None)
+@given(cluster_and_updates())
+def test_ordering_reservations_consistent(setup):
+    """Committed transfers never start before their update is available
+    and never end before they start."""
+    net, ups = setup
+    by_uid = {u.uid: u for u in ups}
+    res = order_updates(list(ups), net, "s", tau_max=8, v_init=0)
+    for uid, tr in res.transfers.items():
+        assert tr.t_start >= by_uid[uid].t_avail - 1e-9
+        assert tr.t_end >= tr.t_start - 1e-9
+
+
+@settings(max_examples=30, deadline=None, derandomize=True)
+@given(cluster_and_updates())
+def test_aggregation_commit_monotone_and_complete(setup):
+    """Aggregation commits every input, never later than the all-direct
+    plan; composed with Alg. 2's order (the real pipeline) commit times are
+    non-decreasing.  (For raw staggered arrivals monotonicity need not
+    hold — work conservation lets an early update use a reservation gap.)"""
+    net, ups = setup
+    direct = aggregate_updates(ups, net.copy(), "s", [])
+    agg = aggregate_updates(ups, net.copy(), "s", ["a1"])
+    assert set(agg.commit_times) == {u.uid for u in ups}
+    assert agg.makespan <= direct.makespan + 1e-9
+
+    # Apply-order semantics: the server applies in Alg. 2's order even when
+    # transfer completions interleave (a slow direct member's own uplink can
+    # outlast a later group's aggregate — work conservation).  Within each
+    # aggregation group, commits are monotone in the given order.
+    ordering = order_updates(list(ups), net.copy(), "s")
+    agg2 = aggregate_updates(ordering.order, net.copy(), "s", ["a1"])
+    pos = {u.uid: i for i, u in enumerate(ordering.order)}
+    for grp in agg2.groups:
+        members = [u.uid for u in grp.members]
+        assert members == sorted(members, key=pos.get)  # order preserved
+        if grp.aggregator is not None and members:
+            # an aggregated group commits atomically (one transfer)
+            commits = {agg2.commit_times[m] for m in members}
+            assert len(commits) == 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(cluster_and_updates(), st.floats(0.1, 100.0))
+def test_scheduler_divergence_always_bounded(setup, div_max):
+    """End-to-end: whatever the topology/batch, the replication plan never
+    exceeds the configured divergence bound."""
+    net, ups = setup
+    net.add_host("r", 100.0)
+    cfg = SchedulerConfig(server="s", aggregators=["a1"], replica="r",
+                          replica_aggregators=[], tau_max=8,
+                          div_max=div_max, gamma=0.9, mode="async")
+    sched = MLfabricScheduler(cfg)
+    plan = sched.schedule_batch(list(ups), net)
+    if plan.replication is not None:
+        assert plan.replication.divergence_after <= div_max + 1e-6

@@ -1,0 +1,131 @@
+"""Tests for the PS execution layer: eq. 1/2 semantics, trainers, replica."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.network import mb
+from repro.core.simulator import N_STATIC, StragglerModel
+from repro.ps import (AsyncTrainer, ParameterServer, ReplicaServer,
+                      SyncTrainer, Worker)
+from repro.ps.replica import recover_from_replica
+
+
+def quad_loss(params, batch):
+    """Convex quadratic: loss = ||w - target||^2 (analytically tractable)."""
+    return jnp.sum(jnp.square(params["w"] - batch["target"]))
+
+
+def make_data_fn(target):
+    def data_fn(worker, t):
+        return {"target": target}
+    return data_fn
+
+
+class TestParameterServer:
+    def test_eq2_momentum_semantics(self):
+        """Server update matches w' = w + u + gamma(w - w_prev) exactly."""
+        gamma = 0.7
+        ps = ParameterServer({"w": jnp.zeros(3)}, gamma=gamma)
+        u1 = {"w": jnp.array([1.0, 0.0, -1.0])}
+        u2 = {"w": jnp.array([0.5, 2.0, 0.0])}
+        ps.push(u1, 0)
+        w1 = np.asarray(ps.params["w"])
+        np.testing.assert_allclose(w1, [1.0, 0.0, -1.0], rtol=1e-6)
+        ps.push(u2, 1)
+        # h1 = u1; w2 = w1 + u2 + gamma*h1
+        np.testing.assert_allclose(np.asarray(ps.params["w"]),
+                                   w1 + np.asarray(u2["w"]) + gamma * w1,
+                                   rtol=1e-6)
+
+    def test_delay_recorded(self):
+        ps = ParameterServer({"w": jnp.zeros(1)})
+        ps.push({"w": jnp.ones(1)}, 0)
+        ps.push({"w": jnp.ones(1)}, 0)   # computed at v0, applied at v1
+        assert ps.delays.taus == [0, 1]
+
+
+class TestWorker:
+    def test_update_is_negative_grad(self):
+        w = Worker("w0", quad_loss, base_lr=0.1, delay_adaptive=False)
+        params = {"w": jnp.array([1.0, 2.0])}
+        target = jnp.array([0.0, 0.0])
+        upd, norm = w.compute_update(params, {"target": target}, version=0,
+                                     t=1)
+        np.testing.assert_allclose(np.asarray(upd["w"]),
+                                   [-0.2, -0.4], rtol=1e-5)
+        assert norm == pytest.approx(np.sqrt(0.2 ** 2 + 0.4 ** 2), rel=1e-4)
+
+    def test_delay_adaptive_shrinks(self):
+        w = Worker("w0", quad_loss, base_lr=0.1, delay_adaptive=True)
+        params = {"w": jnp.array([1.0])}
+        u_fast, _ = w.compute_update(params, {"target": jnp.zeros(1)},
+                                     version=0, t=1, observed_delay=0)
+        u_slow, _ = w.compute_update(params, {"target": jnp.zeros(1)},
+                                     version=0, t=1, observed_delay=50)
+        assert abs(float(u_slow["w"][0])) < abs(float(u_fast["w"][0]))
+
+
+class TestAsyncTrainer:
+    def test_convex_convergence(self):
+        """Async SGD through the full scheduler converges on a quadratic."""
+        target = jnp.array([3.0, -2.0, 1.0, 0.5])
+        trainer = AsyncTrainer(
+            {"w": jnp.zeros(4)}, quad_loss, make_data_fn(target),
+            n_workers=4, tau_max=8, base_lr=0.05, gamma=0.0,
+            delay_adaptive=False, update_size=mb(5), compute_time=0.05,
+            straggler=StragglerModel(0, 1), bandwidth=N_STATIC,
+            eval_fn=lambda p: quad_loss(p, {"target": target}))
+        res = trainer.run(until_commits=150)
+        assert res.commits > 50
+        assert res.final_loss < 0.05, res.final_loss
+
+    def test_delays_bounded(self):
+        target = jnp.zeros(2)
+        trainer = AsyncTrainer(
+            {"w": jnp.ones(2)}, quad_loss, make_data_fn(target),
+            n_workers=6, tau_max=5, base_lr=0.01, compute_time=0.05,
+            straggler=StragglerModel(0.3, 4.0), update_size=mb(20))
+        res = trainer.run(until_commits=60)
+        assert res.delay_stats["max"] <= 5
+
+
+class TestSyncTrainer:
+    def test_sync_step_applies_mean(self):
+        target = jnp.array([1.0, 1.0])
+        tr = SyncTrainer({"w": jnp.zeros(2)}, quad_loss,
+                         make_data_fn(target), n_workers=4, base_lr=0.25,
+                         gamma=0.0, update_size=mb(10))
+        tr.step()
+        # grad = 2(w - t) = -2; update = -lr * mean_grad = 0.5
+        np.testing.assert_allclose(np.asarray(tr.server.params["w"]),
+                                   [0.5, 0.5], rtol=1e-5)
+
+    def test_aggregation_used_under_stragglers(self):
+        target = jnp.zeros(3)
+        tr = SyncTrainer({"w": jnp.ones(3)}, quad_loss,
+                         make_data_fn(target), n_workers=8,
+                         straggler=StragglerModel(0.5, 4.0),
+                         update_size=mb(100), aggregators=3, seed=1)
+        tr.run(3)
+        assert any(s.n_aggregated > 0 for s in tr.stats)
+
+
+class TestReplica:
+    def test_same_order_zero_divergence(self):
+        ps = ParameterServer({"w": jnp.zeros(4)}, gamma=0.9)
+        rep = ReplicaServer({"w": jnp.zeros(4)}, gamma=0.9)
+        rng = np.random.default_rng(0)
+        for i in range(5):
+            u = {"w": jnp.asarray(rng.normal(size=4), jnp.float32)}
+            ps.push(u, i)
+            rep.apply_replicated(u, i, uid=i)
+        assert rep.exact_divergence(ps) < 1e-5
+
+    def test_failover(self):
+        rep = ReplicaServer({"w": jnp.zeros(2)})
+        rep.apply_replicated({"w": jnp.ones(2)}, 0, uid=0)
+        params, version = recover_from_replica(rep)
+        np.testing.assert_allclose(np.asarray(params["w"]), 1.0)
+        assert version == 1

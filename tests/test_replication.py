@@ -1,0 +1,124 @@
+"""Tests for bounded-consistency replication (§3.3, §5.3, eqs. 5-11)."""
+
+import numpy as np
+import pytest
+
+from repro.core.network import NetworkState
+from repro.core.ordering import Update
+from repro.core.replication import (ReplicationState, divergence_bound,
+                                    plan_replication)
+from repro.core.aggregation import aggregate_updates
+
+
+def apply_momentum(w, h, u, gamma):
+    """Eq. 2 as a state machine: w' = w + u + gamma*h ; h' = u + gamma*h."""
+    h_new = u + gamma * h
+    return w + h_new, h_new
+
+
+class TestDivergenceAlgebra:
+    def test_eq6_reorder_divergence(self):
+        """Eq. 5-6: swapping two updates diverges by exactly gamma*||u1-u2||."""
+        rng = np.random.default_rng(0)
+        gamma = 0.9
+        w0 = rng.normal(size=50)
+        h0 = rng.normal(size=50)
+        u1, u2 = rng.normal(size=50), rng.normal(size=50)
+        ws, hs = apply_momentum(*apply_momentum(w0, h0, u1, gamma), u2, gamma)
+        wr, hr = apply_momentum(*apply_momentum(w0, h0, u2, gamma), u1, gamma)
+        assert np.linalg.norm(ws - wr) == pytest.approx(
+            gamma * np.linalg.norm(u1 - u2), rel=1e-9)
+
+    def test_eq7_lead_of_two(self):
+        """Eq. 7: server leads by [u1, u2] =>
+        w2s - w0 = (g + g^2) h0 + (1 + g) u1 + u2."""
+        rng = np.random.default_rng(1)
+        g = 0.7
+        w0, h0 = rng.normal(size=20), rng.normal(size=20)
+        u1, u2 = rng.normal(size=20), rng.normal(size=20)
+        w1, h1 = apply_momentum(w0, h0, u1, g)
+        w2, _ = apply_momentum(w1, h1, u2, g)
+        expect = (g + g ** 2) * h0 + (1 + g) * u1 + u2
+        assert np.allclose(w2 - w0, expect)
+
+    def test_bound_dominates_exact(self):
+        """The norm-based bound (eqs. 10-11) upper-bounds exact divergence
+        for random momentum histories and pending updates."""
+        rng = np.random.default_rng(2)
+        for gamma in (0.0, 0.5, 0.9, 1.0):
+            for j in (1, 2, 5):
+                w0, h0 = rng.normal(size=30), rng.normal(size=30)
+                us = [rng.normal(size=30) for _ in range(j)]
+                w, h = w0, h0
+                for u in us:
+                    w, h = apply_momentum(w, h, u, gamma)
+                exact = np.linalg.norm(w - w0)
+                bound = divergence_bound(np.linalg.norm(h0),
+                                         [np.linalg.norm(u) for u in us], gamma)
+                assert exact <= bound + 1e-9, (gamma, j)
+
+    def test_zero_pending_zero_divergence(self):
+        assert divergence_bound(5.0, [], 0.9) == 0.0
+
+    def test_bound_monotone_in_lead(self):
+        norms = [1.0, 2.0, 0.5, 3.0]
+        bounds = [divergence_bound(1.0, norms[:j], 0.9) for j in range(5)]
+        assert all(b2 >= b1 for b1, b2 in zip(bounds, bounds[1:]))
+
+
+def make_setup(n=4, size=100.0, bw=100.0):
+    ups = [Update(uid=i, worker=f"w{i}", size=size, version=0, norm=1.0)
+           for i in range(n)]
+    net = NetworkState([u.worker for u in ups] + ["s", "r", "a1"], bw)
+    return ups, net
+
+
+class TestPlanReplication:
+    def run_plan(self, div_max, n=4):
+        ups, net = make_setup(n=n)
+        server_plan = aggregate_updates(ups, net, "s", [])
+        state = ReplicationState(gamma=0.9, div_max=div_max)
+        res = plan_replication(ups, server_plan.commit_times,
+                               server_plan.network, "r", ["a1"], state)
+        return res, state
+
+    def test_divergence_bound_always_met(self):
+        for div_max in (0.0, 0.5, 2.0, 10.0, float("inf")):
+            res, _ = self.run_plan(div_max)
+            assert res.divergence_after <= div_max + 1e-9
+
+    def test_loose_bound_punts_more(self):
+        """Paper §5.3/Fig. 9: larger Div_max defers more replica traffic."""
+        tight, _ = self.run_plan(0.0)
+        loose, _ = self.run_plan(1e9)
+        assert len(loose.punted) >= len(tight.punted)
+        assert len(tight.frozen) >= len(loose.frozen)
+
+    def test_replica_same_order_prefix(self):
+        res, _ = self.run_plan(2.0, n=5)
+        frozen_uids = [u.uid for u in res.frozen]
+        assert frozen_uids == sorted(frozen_uids)  # order preserved
+        # frozen + punted partition the queue
+        all_uids = frozen_uids + [u.uid for u in res.punted]
+        assert sorted(all_uids) == list(range(5))
+
+    def test_punted_carry_to_next_batch(self):
+        ups, net = make_setup(n=3)
+        server_plan = aggregate_updates(ups, net, "s", [])
+        state = ReplicationState(gamma=0.9, div_max=1e9)
+        res1 = plan_replication(ups, server_plan.commit_times,
+                                server_plan.network, "r", ["a1"], state)
+        carried = len(res1.punted)
+        # next batch: punted go first in the replica queue
+        ups2 = [Update(uid=10 + i, worker=f"w{i}", size=100.0, version=1,
+                       norm=1.0) for i in range(2)]
+        net2 = NetworkState([u.worker for u in ups2] + ["s", "r", "a1"], 100.0)
+        plan2 = aggregate_updates(ups2, net2, "s", [])
+        res2 = plan_replication(ups2, plan2.commit_times, plan2.network,
+                                "r", ["a1"], state)
+        queue2 = [u.uid for u in res2.frozen] + [u.uid for u in res2.punted]
+        assert queue2[:carried] == [u.uid for u in res1.punted][:carried]
+
+    def test_history_bound_accumulates(self):
+        _, state = self.run_plan(0.0)
+        assert state.h_norm_ub > 0.0  # frozen commits folded into ||h|| bound

@@ -1,0 +1,114 @@
+"""Tests for the composed scheduler (§4-5) and the brute-force reference."""
+
+import random
+
+import pytest
+
+from repro.core.network import NetworkState
+from repro.core.optimal import brute_force_schedule
+from repro.core.ordering import Update
+from repro.core.scheduler import MLfabricScheduler, SchedulerConfig
+
+
+def make_net(n_workers, extra=(), bw=100.0):
+    hosts = [f"w{i}" for i in range(n_workers)] + ["s"] + list(extra)
+    return NetworkState(hosts, bw)
+
+
+def make_updates(n, rng, v_init=0):
+    return [Update(uid=i, worker=f"w{i}", size=rng.uniform(20, 300),
+                   version=v_init - rng.randint(0, 3), norm=rng.uniform(0.1, 2.0))
+            for i in range(n)]
+
+
+class TestSchedulerBatch:
+    def test_async_full_pipeline(self):
+        rng = random.Random(0)
+        cfg = SchedulerConfig(server="s", aggregators=["a1"], replica="r",
+                              replica_aggregators=["a2"], tau_max=10,
+                              div_max=5.0, gamma=0.9, mode="async")
+        sched = MLfabricScheduler(cfg)
+        net = make_net(6, extra=["a1", "a2", "r"])
+        plan = sched.schedule_batch(make_updates(6, rng), net)
+        assert plan.order, "some updates must be committed"
+        assert plan.replication is not None
+        assert plan.replication.divergence_after <= cfg.div_max + 1e-9
+        # commit times exist for every ordered update
+        assert set(plan.commit_times) == {u.uid for u in plan.order}
+
+    def test_sync_mode_keeps_all_updates(self):
+        """§6: synchronous mode never drops or re-orders."""
+        rng = random.Random(1)
+        cfg = SchedulerConfig(server="s", aggregators=["a1"], mode="sync")
+        sched = MLfabricScheduler(cfg)
+        ups = make_updates(5, rng)
+        plan = sched.schedule_batch(ups, make_net(5, extra=["a1"]))
+        assert [u.uid for u in plan.order] == [u.uid for u in ups]
+        assert not plan.dropped
+
+    def test_version_advances(self):
+        rng = random.Random(2)
+        cfg = SchedulerConfig(server="s", mode="async")
+        sched = MLfabricScheduler(cfg)
+        plan = sched.schedule_batch(make_updates(4, rng), make_net(4))
+        assert sched.v_server == len(plan.order)
+
+    def test_delay_bound_enforced_or_dropped(self):
+        """With tau_max, every committed update's apply position respects
+        its deadline; infeasible ones are dropped, not violated."""
+        rng = random.Random(3)
+        for _ in range(10):
+            cfg = SchedulerConfig(server="s", tau_max=4, mode="async")
+            sched = MLfabricScheduler(cfg)
+            n = rng.randint(3, 8)
+            ups = [Update(uid=i, worker=f"w{i}", size=rng.uniform(10, 400),
+                          version=-rng.randint(0, 3)) for i in range(n)]
+            net = make_net(n)
+            for i in range(n):
+                if rng.random() < 0.3:
+                    net.set_bandwidth(f"w{i}", 0.0, up=10.0)
+            plan = sched.schedule_batch(ups, net)
+            for pos, u in enumerate(plan.order, start=1):
+                assert u.deadline is None or pos <= u.deadline
+
+
+class TestAgainstBruteForce:
+    def test_heuristic_near_optimal_small(self):
+        """The §5 decomposition stays within 1.5x of the exhaustive optimum
+        on tiny instances (it was designed as a tractable approximation)."""
+        rng = random.Random(4)
+        worst_ratio = 1.0
+        for trial in range(10):
+            n = rng.randint(2, 5)
+            ups = [Update(uid=i, worker=f"w{i}", size=rng.uniform(10, 300),
+                          version=0) for i in range(n)]
+            net = make_net(n, extra=["a1"])
+            cfg = SchedulerConfig(server="s", aggregators=["a1"], mode="async")
+            sched = MLfabricScheduler(cfg)
+            plan = sched.schedule_batch([Update(**vars(u)) for u in ups],
+                                        net.copy())
+            opt = brute_force_schedule(ups, net, "s", ["a1"],
+                                       objective="avg_commit")
+            if plan.order:
+                heur = (sum(plan.commit_times.values())
+                        / len(plan.commit_times))
+                ratio = heur / max(opt.avg_commit, 1e-12)
+                worst_ratio = max(worst_ratio, ratio)
+        assert worst_ratio <= 1.5, worst_ratio
+
+    def test_sjf_optimal_on_shared_bottleneck(self):
+        """With the server downlink as the only bottleneck and no
+        aggregators, SJF is exactly optimal for average completion."""
+        rng = random.Random(5)
+        for _ in range(5):
+            n = rng.randint(2, 5)
+            ups = [Update(uid=i, worker=f"w{i}", size=rng.uniform(10, 300),
+                          version=0) for i in range(n)]
+            net = make_net(n, bw=100.0)
+            cfg = SchedulerConfig(server="s", mode="async")
+            plan = MLfabricScheduler(cfg).schedule_batch(
+                [Update(**vars(u)) for u in ups], net.copy())
+            opt = brute_force_schedule(ups, net, "s", [],
+                                       objective="avg_commit")
+            heur = sum(plan.commit_times.values()) / len(plan.commit_times)
+            assert heur == pytest.approx(opt.avg_commit, rel=1e-6)

@@ -1,0 +1,130 @@
+"""Tests for the discrete-event cluster simulator and baselines (§7)."""
+
+import pytest
+
+from repro.core.baselines import (FairShareAsync, SyncSim, max_min_rates,
+                                  ring_allreduce_time, tree_allreduce_time)
+from repro.core.network import gbps, mb
+from repro.core.scheduler import SchedulerConfig
+from repro.core.simulator import (C1, C2, ClusterSim, N1, N_STATIC,
+                                  StragglerModel, BandwidthModel)
+
+
+def ml_cfg(**kw):
+    base = dict(server="server", aggregators=["worker0", "worker1"],
+                tau_max=30, mode="async")
+    base.update(kw)
+    return SchedulerConfig(**base)
+
+
+class TestClusterSim:
+    def test_progress_and_versions(self):
+        sim = ClusterSim(4, ml_cfg(), update_size=mb(10), compute_time=0.05,
+                         straggler=StragglerModel(0, 1), bandwidth=N_STATIC,
+                         seed=0)
+        res = sim.run(until_time=5.0)
+        assert res.n_commits > 10
+        # versions strictly increase by one per commit
+        for i, rec in enumerate(res.commits):
+            assert rec.version_committed == i
+
+    def test_delays_bounded_by_tau_max(self):
+        """MLfabric-A's core guarantee: observed delay <= tau_max."""
+        tau = 8
+        sim = ClusterSim(8, ml_cfg(tau_max=tau), update_size=mb(50),
+                         compute_time=0.05, straggler=C2, bandwidth=N1,
+                         seed=1)
+        res = sim.run(until_time=20.0)
+        assert res.n_commits > 0
+        assert res.delay.max <= tau
+
+    def test_stragglers_drive_drops(self):
+        """Slow links + tight delay bound => some updates are dropped."""
+        slow = BandwidthModel(probs=(0.5, 0.0, 0.0, 0.0, 0.5), period=2.0)
+        sim = ClusterSim(8, ml_cfg(tau_max=4), update_size=mb(100),
+                         compute_time=0.05, straggler=C2, bandwidth=slow,
+                         seed=2)
+        res = sim.run(until_time=30.0)
+        assert res.drops > 0
+
+    def test_aggregation_reduces_server_bytes(self):
+        n, size, t_end = 8, mb(50), 10.0
+        with_agg = ClusterSim(n, ml_cfg(), update_size=size,
+                              compute_time=0.02, seed=3).run(until_time=t_end)
+        without = ClusterSim(n, ml_cfg(aggregators=[]), update_size=size,
+                             compute_time=0.02, seed=3).run(until_time=t_end)
+        per_commit_with = with_agg.bytes_to_server / max(with_agg.n_commits, 1)
+        per_commit_without = without.bytes_to_server / max(without.n_commits, 1)
+        assert per_commit_with < per_commit_without
+
+    def test_replication_divergence_bounded(self):
+        cfg = ml_cfg(replica="replica", replica_aggregators=["worker2"],
+                     div_max=3.0, gamma=0.9)
+        sim = ClusterSim(6, cfg, update_size=mb(20), compute_time=0.05, seed=4)
+        res = sim.run(until_time=10.0)
+        assert res.replica_divergence_trace, "replication must have run"
+        assert all(d <= 3.0 + 1e-9 for _, d in res.replica_divergence_trace)
+        assert res.bytes_to_replica > 0
+
+    def test_training_mode_callbacks(self):
+        seen = {"computes": 0, "commits": 0}
+
+        def on_compute(worker, version):
+            seen["computes"] += 1
+            return mb(10), 1.0
+
+        def on_commit(rec):
+            seen["commits"] += 1
+
+        sim = ClusterSim(3, ml_cfg(), compute_time=0.05, seed=5,
+                         on_compute=on_compute, on_commit=on_commit)
+        res = sim.run(until_time=3.0)
+        assert seen["computes"] >= res.n_commits
+        assert seen["commits"] == res.n_commits
+
+
+class TestBaselines:
+    def test_max_min_fairness(self):
+        # two flows share one downlink of 10; each gets 5
+        rates = max_min_rates([(0, "a", "s"), (1, "b", "s")],
+                              {"a": 100.0, "b": 100.0, "s": 100.0},
+                              {"a": 100.0, "b": 100.0, "s": 10.0})
+        assert rates[0] == pytest.approx(5.0)
+        assert rates[1] == pytest.approx(5.0)
+
+    def test_max_min_bottleneck_flow(self):
+        # flow 0 capped by its own uplink (2); flow 1 takes the rest
+        rates = max_min_rates([(0, "a", "s"), (1, "b", "s")],
+                              {"a": 2.0, "b": 100.0, "s": 100.0},
+                              {"a": 100.0, "b": 100.0, "s": 10.0})
+        assert rates[0] == pytest.approx(2.0)
+        assert rates[1] == pytest.approx(8.0)
+
+    def test_vanilla_async_high_delay(self):
+        """Vanilla async (fair sharing) sees a wider delay spread than
+        MLfabric-A under the same workload — the paper's motivation."""
+        kw = dict(update_size=mb(50), compute_time=0.05, straggler=C2, seed=7)
+        vanilla = FairShareAsync(8, **kw).run(until_time=20.0)
+        fabric = ClusterSim(8, ml_cfg(tau_max=8), bandwidth=N_STATIC,
+                            **kw).run(until_time=20.0)
+        assert vanilla.n_commits > 0 and fabric.n_commits > 0
+        assert fabric.delay.max <= 8
+        assert vanilla.delay.max >= fabric.delay.max
+
+    def test_ring_allreduce_formula(self):
+        # paper §2: 100MB, 30 workers, 10Gbps -> >= 320ms... with our exact
+        # formula: 2*(N-1)/N * size / bw
+        t = ring_allreduce_time(mb(100), [gbps(10)] * 30)
+        assert t == pytest.approx(2 * 29 / 30 * mb(100) / gbps(10), rel=1e-9)
+        assert 0.1 < t < 0.2
+
+    def test_tree_slower_than_ring(self):
+        bws = [gbps(10)] * 16
+        assert tree_allreduce_time(mb(100), bws) > ring_allreduce_time(mb(100), bws)
+
+    def test_sync_sim_straggler_impact(self):
+        """Stragglers hurt synchronous SGD (the paper's Table 2 driver)."""
+        kw = dict(update_size=mb(100), compute_time=0.1)
+        fast = SyncSim(16, straggler=StragglerModel(0, 1), seed=8, **kw).run(50)
+        slow = SyncSim(16, straggler=C2, seed=8, **kw).run(50)
+        assert slow.total_time > fast.total_time

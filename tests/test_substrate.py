@@ -1,0 +1,171 @@
+"""Tests for data pipeline, optimizers, checkpointing, bounded-div replica."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import BoundedDivergenceReplica, Checkpointer
+from repro.data import DataPipeline, SyntheticLM, lda_corpus
+from repro.optim import (adamw_init, adamw_update, cosine_schedule,
+                         momentum_sgd_init, momentum_sgd_update,
+                         step_decay_schedule, wsd_schedule)
+
+
+class TestData:
+    def test_deterministic_batches(self):
+        src = SyntheticLM(vocab_size=100, seq_len=16, seed=3)
+        b1 = src.batch(5, 4)
+        b2 = src.batch(5, 4)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+    def test_labels_shifted(self):
+        src = SyntheticLM(vocab_size=100, seq_len=16, seed=3)
+        b = src.batch(0, 2)
+        assert b["tokens"].shape == b["labels"].shape == (2, 16)
+
+    def test_learnable_structure(self):
+        """Tokens follow the successor table most of the time."""
+        src = SyntheticLM(vocab_size=50, seq_len=64, seed=0, structure=0.9)
+        b = src.batch(0, 8)
+        follows = src._succ[b["tokens"][:, :-1]] == b["tokens"][:, 1:]
+        assert follows.mean() > 0.6
+
+    def test_host_sharding_partitions(self):
+        src = SyntheticLM(vocab_size=100, seq_len=8, seed=1)
+        full = DataPipeline(src, global_batch=8)
+        h0 = DataPipeline(src, global_batch=8, host_index=0, host_count=2)
+        h1 = DataPipeline(src, global_batch=8, host_index=1, host_count=2)
+        fb, b0, b1 = full.next_batch(), h0.next_batch(), h1.next_batch()
+        np.testing.assert_array_equal(
+            np.concatenate([b0["tokens"], b1["tokens"]]), fb["tokens"])
+
+    def test_cursor_checkpointable(self):
+        src = SyntheticLM(vocab_size=100, seq_len=8, seed=1)
+        p = DataPipeline(src, global_batch=4)
+        p.next_batch()
+        state = p.state_dict()
+        expected = p.next_batch()
+        p2 = DataPipeline(SyntheticLM(vocab_size=100, seq_len=8, seed=1),
+                          global_batch=4)
+        p2.load_state_dict(state)
+        np.testing.assert_array_equal(p2.next_batch()["tokens"],
+                                      expected["tokens"])
+
+    def test_lda_corpus_shapes(self):
+        docs, theta, phi = lda_corpus(20, 50, 5, 100, seed=0)
+        assert docs.shape == (20, 50)
+        assert docs.sum() == 20 * 100
+        np.testing.assert_allclose(theta.sum(1), 1.0, rtol=1e-6)
+
+
+class TestOptim:
+    def test_sgd_reduces_quadratic(self):
+        params = {"w": jnp.array([2.0, -3.0])}
+        state = momentum_sgd_init(params)
+        for _ in range(50):
+            grads = {"w": 2 * params["w"]}
+            params, state = momentum_sgd_update(params, grads, state,
+                                                lr=0.05, gamma=0.8)
+        assert float(jnp.abs(params["w"]).max()) < 0.05
+
+    def test_adamw_reduces_quadratic(self):
+        params = {"w": jnp.array([2.0, -3.0])}
+        state = adamw_init(params)
+        for _ in range(100):
+            grads = {"w": 2 * params["w"]}
+            params, state = adamw_update(params, grads, state, lr=0.05,
+                                         weight_decay=0.0)
+        assert float(jnp.abs(params["w"]).max()) < 0.1
+
+    def test_tuple_structured_params(self):
+        """Optimizers must survive tuple-containing pytrees (jamba)."""
+        params = {"layers": ({"w": jnp.ones(2)}, {"w": jnp.ones(3)})}
+        state = momentum_sgd_init(params)
+        grads = jax.tree.map(jnp.ones_like, params)
+        new, _ = momentum_sgd_update(params, grads, state, lr=0.1, gamma=0.0)
+        np.testing.assert_allclose(np.asarray(new["layers"][0]["w"]), 0.9)
+
+    def test_wsd_schedule_phases(self):
+        fn = wsd_schedule(1.0, warmup=10, stable=20, decay=10)
+        assert float(fn(0)) == 0.0
+        assert float(fn(10)) == pytest.approx(1.0)
+        assert float(fn(25)) == pytest.approx(1.0)
+        assert float(fn(40)) == pytest.approx(0.1, rel=1e-3)
+
+    def test_step_decay_paper_schedule(self):
+        fn = step_decay_schedule(1.0, [30, 60, 90])
+        assert float(fn(29)) == pytest.approx(1.0)
+        assert float(fn(30)) == pytest.approx(0.1)
+        assert float(fn(95)) == pytest.approx(1e-3)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), keep=2)
+        state = {"params": {"w": jnp.arange(4, dtype=jnp.float32)},
+                 "opt": {"m": jnp.ones((2, 2))}}
+        ck.save(10, state, metadata={"cursor": 7})
+        step, restored, meta = ck.restore(state)
+        assert step == 10 and meta["cursor"] == 7
+        np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                      [0, 1, 2, 3])
+
+    def test_keep_n(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), keep=2)
+        state = {"params": {"w": jnp.zeros(1)}}
+        for s in (1, 2, 3, 4):
+            ck.save(s, state)
+        assert ck.all_steps() == [3, 4]
+
+    def test_restart_resumes_training(self, tmp_path):
+        """Full restart loop: save at step k, restore, data cursor matches."""
+        from repro.data import DataPipeline, SyntheticLM
+        src = SyntheticLM(vocab_size=50, seq_len=8, seed=0)
+        pipe = DataPipeline(src, global_batch=2)
+        params = {"w": jnp.zeros(3)}
+        ck = Checkpointer(str(tmp_path))
+        for step in range(5):
+            pipe.next_batch()
+            params = {"w": params["w"] + 1}
+        ck.save(5, {"params": params}, metadata=pipe.state_dict())
+        # crash + restart
+        step, state, meta = ck.restore({"params": params})
+        pipe2 = DataPipeline(SyntheticLM(vocab_size=50, seq_len=8, seed=0),
+                             global_batch=2)
+        pipe2.load_state_dict(meta)
+        np.testing.assert_array_equal(pipe2.next_batch()["tokens"],
+                                      pipe.next_batch()["tokens"])
+
+
+class TestBoundedDivergenceReplica:
+    def test_tight_bound_syncs_every_step(self):
+        rep = BoundedDivergenceReplica(div_max=0.0, gamma=0.9)
+        p = {"w": np.zeros(4, np.float32)}
+        for step in range(5):
+            assert rep.offer(step, p, update_norm=1.0)
+        assert rep.syncs == 5
+        assert rep.replication_savings == 0.0
+
+    def test_loose_bound_saves_bytes(self):
+        """Paper Fig. 9: larger Div_max -> fewer replica transfers."""
+        savings = {}
+        for div_max in (0.5, 5.0, 50.0):
+            rep = BoundedDivergenceReplica(div_max=div_max, gamma=0.9)
+            p = {"w": np.zeros(1000, np.float32)}
+            for step in range(100):
+                rep.offer(step, p, update_norm=0.1)
+            savings[div_max] = rep.replication_savings
+        assert savings[0.5] <= savings[5.0] <= savings[50.0]
+        assert savings[50.0] > 0.5
+
+    def test_recovery_reports_lost_updates(self):
+        rep = BoundedDivergenceReplica(div_max=100.0, gamma=0.9)
+        p = {"w": np.ones(4, np.float32)}
+        rep.offer(0, p, update_norm=0.1)
+        for step in range(1, 4):
+            rep.offer(step, p, update_norm=0.1)
+        params, step, lost = rep.recover()
+        assert step == 0 and lost == 3
