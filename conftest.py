@@ -1,0 +1,13 @@
+"""Root conftest: make ``python -m pytest`` work without PYTHONPATH=src.
+
+(pyproject.toml's ``pythonpath = ["src"]`` does the same on pytest >= 7;
+this keeps older pytest and direct ``python tests/...`` invocations
+working too.)
+"""
+
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

@@ -1,0 +1,27 @@
+"""``repro.dist`` — the distribution data plane.
+
+Bridges the ``core/`` control plane (ordering, aggregation, replication
+*decisions*) to real JAX execution on a device mesh:
+
+* ``compat``      — one place absorbing jax-version API drift
+* ``sharding``    — partition policy: params / inputs / caches / activations
+* ``policy``      — the ``sharding_policy`` context + ``constrain`` hook
+  the model forward passes call
+* ``collectives`` — ``mlfabric_grad_reduce``: bucketed, shortest-first,
+  hierarchical (optionally int8 cross-pod) gradient reduction in-graph
+* ``elastic``     — mesh rebuild + replica restore on device loss
+"""
+
+from . import collectives, compat, elastic, policy, sharding
+from .collectives import mlfabric_grad_reduce, plan_buckets
+from .compat import AxisType, make_mesh, shard_map
+from .elastic import ElasticSession, surviving_mesh
+from .policy import constrain, sharding_policy
+
+__all__ = [
+    "collectives", "compat", "elastic", "policy", "sharding",
+    "mlfabric_grad_reduce", "plan_buckets",
+    "AxisType", "make_mesh", "shard_map",
+    "ElasticSession", "surviving_mesh",
+    "constrain", "sharding_policy",
+]

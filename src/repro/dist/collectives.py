@@ -1,0 +1,142 @@
+"""MLfabric gradient reduction as explicit in-graph collectives.
+
+``mlfabric_grad_reduce`` replaces GSPMD's automatic gradient all-reduce
+with the schedule the paper's control plane (``core/ordering.py``,
+``core/aggregation.py``) plans:
+
+* **Bucketing** — gradient leaves are packed into ~``bucket_bytes``
+  transfer units, the granularity MLfabric schedules (paper §4: updates
+  are the unit of transfer; framework gradients are bucketed exactly so
+  the network sees schedulable-size messages).
+* **Shortest-job-first issue order** (Alg. 2, §5.1.1) — buckets are
+  reduced smallest-first, and consecutive reductions are chained through
+  ``optimization_barrier`` so XLA cannot reorder them: short transfers
+  complete early, exactly the avg-completion-time argument of the paper.
+* **Hierarchical aggregation** (§5.2) — an intra-pod ``psum`` feeds an
+  optional inter-pod stage that mirrors the paper's aggregator hosts:
+  every pod ships its partial aggregate (optionally int8-compressed via
+  ``kernels/quantize.py``) and each host runs the fused aggregator
+  compute from ``kernels/grad_aggregate.py`` over the gathered updates.
+
+The function must be called inside a ``shard_map`` body where
+``intra_axis`` (and ``inter_axis``, when given) are manual mesh axes —
+see ``launch/steps.py:build_mlfabric_train_step``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import dequantize_op, grad_aggregate_op, quantize_op
+
+Params = Any
+
+
+# --------------------------------------------------------------------------- #
+# bucket planning (pure; unit-tested without devices)
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class Bucket:
+    """One transfer unit: which flat-leaf indices it carries and its size."""
+
+    indices: Tuple[int, ...]
+    nbytes: int
+
+
+def plan_buckets(leaf_nbytes: Sequence[int], bucket_bytes: int, *,
+                 shortest_first: bool = True) -> List[Bucket]:
+    """Greedy-pack leaves (in tree order) into <= ``bucket_bytes`` buckets.
+
+    A leaf larger than ``bucket_bytes`` becomes its own bucket — MLfabric
+    never splits an update, it orders whole transfers.  With
+    ``shortest_first`` the buckets are issued smallest-first (Alg. 2's
+    SJF rule); ties keep tree order so the plan is deterministic.
+    """
+    if bucket_bytes <= 0:
+        raise ValueError(f"bucket_bytes must be positive: {bucket_bytes}")
+    buckets: List[Bucket] = []
+    cur: List[int] = []
+    cur_bytes = 0
+    for i, nbytes in enumerate(leaf_nbytes):
+        if cur and cur_bytes + nbytes > bucket_bytes:
+            buckets.append(Bucket(tuple(cur), cur_bytes))
+            cur, cur_bytes = [], 0
+        cur.append(i)
+        cur_bytes += nbytes
+    if cur:
+        buckets.append(Bucket(tuple(cur), cur_bytes))
+    if shortest_first:
+        buckets.sort(key=lambda b: (b.nbytes, b.indices))
+    return buckets
+
+
+# --------------------------------------------------------------------------- #
+# the aggregation hierarchy
+# --------------------------------------------------------------------------- #
+def _inter_pod_aggregate(vec: jax.Array, inter_axis: str, *,
+                         compress: bool) -> jax.Array:
+    """Cross-pod stage: gather every pod's partial aggregate and run the
+    aggregator's fused (sum + norm) compute from ``kernels/``.
+
+    With ``compress`` the wire payload is the int8 blocks + f32 scales
+    (the §8-complementary gradient compression); dequantization happens
+    at the aggregator, exactly like a receiving aggregator host would.
+    """
+    if compress:
+        d = vec.shape[0]
+        q, s = quantize_op(vec)                      # pads internally
+        qs = jax.lax.all_gather(q, inter_axis)       # [P, D_pad] int8 wire
+        ss = jax.lax.all_gather(s, inter_axis)       # [P, D_pad/block] f32
+        gathered = jax.vmap(
+            lambda qq, sc: dequantize_op(qq, sc, orig_len=d))(qs, ss)
+    else:
+        gathered = jax.lax.all_gather(vec, inter_axis)   # [P, D] f32 wire
+    n_pods = gathered.shape[0]
+    weights = jnp.ones((n_pods,), jnp.float32)
+    agg, _ = grad_aggregate_op(gathered, weights)
+    return agg
+
+
+def mlfabric_grad_reduce(grads: Params, *, intra_axis: str = "data",
+                         inter_axis: Optional[str] = None,
+                         bucket_bytes: int = 4 * 2 ** 20,
+                         shortest_first: bool = True,
+                         compress_inter: bool = False,
+                         mean_over: int = 1) -> Params:
+    """Scheduled hierarchical mean of a gradient pytree.
+
+    Numerically equivalent (to f32 reduction tolerance; int8 tolerance
+    with ``compress_inter``) to ``psum(grads) / mean_over`` over the
+    batch axes, but executed as an explicit bucket schedule.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    if not leaves:
+        return grads
+    nbytes = [leaf.size * 4 for leaf in leaves]      # reduced in f32
+    buckets = plan_buckets(nbytes, bucket_bytes, shortest_first=shortest_first)
+
+    out: List[Optional[jax.Array]] = [None] * len(leaves)
+    token = jnp.zeros((), jnp.float32)
+    for bucket in buckets:
+        vec = jnp.concatenate(
+            [leaves[i].astype(jnp.float32).ravel() for i in bucket.indices])
+        # Chain each bucket on the previous one's result: the compiler
+        # must issue the collectives in the planned (SJF) order.
+        vec, token = jax.lax.optimization_barrier((vec, token))
+        vec = jax.lax.psum(vec, intra_axis)          # intra-pod reduce
+        if inter_axis is not None:
+            vec = _inter_pod_aggregate(vec, inter_axis,
+                                       compress=compress_inter)
+        vec = vec / mean_over
+        token = vec[0] * 0.0
+        offset = 0
+        for i in bucket.indices:
+            leaf = leaves[i]
+            out[i] = vec[offset:offset + leaf.size].reshape(
+                leaf.shape).astype(leaf.dtype)
+            offset += leaf.size
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,83 @@
+"""JAX version compatibility for the distribution layer.
+
+The rest of the repo codes against the modern mesh/shard_map surface
+(``jax.make_mesh(..., axis_types=...)``, ``jax.sharding.AxisType``,
+``jax.shard_map(..., axis_names=..., check_vma=...)``).  The pinned
+container runs jax 0.4.37, where meshes have no axis types and shard_map
+lives in ``jax.experimental`` with the complementary ``auto=`` argument.
+This module is the single place that difference is absorbed; everything
+under ``repro`` imports mesh/shard_map helpers from here instead of
+touching ``jax.*`` directly.
+"""
+
+from __future__ import annotations
+
+import enum
+import inspect
+from typing import Any, Callable, Optional, Sequence, Set
+
+import jax
+from jax.sharding import Mesh
+
+
+class _AxisTypeShim(enum.Enum):
+    """Stand-in for ``jax.sharding.AxisType`` on old jax.
+
+    Pre-axis-type meshes behave exactly like all-Auto meshes, so the shim
+    only needs to exist for call sites that spell out ``AxisType.Auto``.
+    """
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+    _HAS_AXIS_TYPES = True
+except ImportError:  # jax 0.4.x
+    AxisType = _AxisTypeShim  # type: ignore[assignment]
+    _HAS_AXIS_TYPES = False
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              devices: Optional[Sequence[Any]] = None,
+              axis_types: Optional[Sequence[Any]] = None) -> Mesh:
+    """``jax.make_mesh`` that accepts (and, on old jax, drops) axis_types.
+
+    On jax 0.4.x every mesh axis is implicitly Auto, which is the only
+    axis type this repo uses at mesh-construction time, so dropping the
+    argument preserves semantics.
+    """
+    kwargs: dict = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if _HAS_AXIS_TYPES and axis_types is not None:
+        kwargs["axis_types"] = tuple(axis_types)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def shard_map(f: Callable, *, mesh: Mesh, in_specs: Any, out_specs: Any,
+              axis_names: Optional[Set[str]] = None,
+              check_vma: bool = False) -> Callable:
+    """Modern ``jax.shard_map`` signature on any jax.
+
+    ``axis_names`` is the set of mesh axes the body is *manual* over;
+    every other axis stays auto (GSPMD).  On jax 0.4.x this maps onto
+    ``jax.experimental.shard_map.shard_map(..., auto=<complement>,
+    check_rep=check_vma)``.
+    """
+    manual = set(mesh.axis_names) if axis_names is None else set(axis_names)
+    if hasattr(jax, "shard_map"):  # jax >= 0.6
+        kwargs: dict = {"mesh": mesh, "in_specs": in_specs,
+                        "out_specs": out_specs}
+        sig = inspect.signature(jax.shard_map)
+        if "axis_names" in sig.parameters:
+            kwargs["axis_names"] = manual
+        if "check_vma" in sig.parameters:
+            kwargs["check_vma"] = check_vma
+        return jax.shard_map(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset(set(mesh.axis_names) - manual)
+    return _shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, auto=auto)

@@ -1,0 +1,95 @@
+"""Activation sharding policy: a dynamic context the model code queries.
+
+Model forward passes are written once and call ``constrain(x, "residual")``
+at layout-critical points; *which* layout that means is decided per
+(mesh x shape) cell by ``repro.dist.sharding.activation_policy`` and bound
+with the ``sharding_policy`` context manager in the step builders.  With no
+policy bound (pure CPU unit tests, eval_shape tracing) ``constrain`` is the
+identity, so model code never depends on a mesh being present.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Iterator, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STACK = threading.local()
+
+
+def _stack() -> list:
+    if not hasattr(_STACK, "policies"):
+        _STACK.policies = []
+    return _STACK.policies
+
+
+@contextmanager
+def sharding_policy(mesh: Mesh,
+                    act: Dict[str, P]) -> Iterator[None]:
+    """Bind an activation policy ``{name: PartitionSpec}`` for ``mesh``.
+
+    Nestable; the innermost binding wins.  The specs are *hints*: at
+    ``constrain`` time any axis that does not evenly divide the matching
+    tensor dimension is dropped rather than erroring, so one policy dict
+    serves train / prefill / decode shapes alike.
+    """
+    _stack().append((mesh, dict(act)))
+    try:
+        yield
+    finally:
+        _stack().pop()
+
+
+def current_policy() -> Optional[Tuple[Mesh, Dict[str, P]]]:
+    s = _stack()
+    return s[-1] if s else None
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    names = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for name in names:
+        n *= mesh.shape[name]
+    return n
+
+
+def _fit_spec(mesh: Mesh, spec: P, shape: Tuple[int, ...]) -> P:
+    """Rank-adjust ``spec`` to ``shape`` and drop non-dividing axes."""
+    entries = list(tuple(spec) + (None,) * (len(shape) - len(spec)))
+    entries = entries[:len(shape)]
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None or dim % _axis_size(mesh, entry) != 0:
+            out.append(None)
+        else:
+            out.append(entry)
+    return P(*out)
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    """Apply the active policy's constraint for ``name`` (identity if no
+    policy is bound or the policy has no entry for ``name``).
+
+    Inside a ``shard_map`` body the constraint may reference axes the body
+    is manual over (old-jax limitation); that raises at trace time, and we
+    fall back to the unconstrained value — the spec is a layout hint, never
+    a semantics change.
+    """
+    pol = current_policy()
+    if pol is None:
+        return x
+    mesh, act = pol
+    spec = act.get(name)
+    if spec is None:
+        return x
+    fitted = _fit_spec(mesh, spec, x.shape)
+    if all(e is None for e in fitted):
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, fitted))
+    except Exception:
+        return x

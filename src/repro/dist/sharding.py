@@ -1,0 +1,192 @@
+"""Mesh-aware partition policy: which axis every tensor dim lives on.
+
+One rule table covers every assigned arch (``repro/configs``): parameter
+leaves are matched by their innermost pytree key ("wq", "w_gate", ...) and
+given a spec over their *trailing* dims, so the same rule applies whether
+the leaf carries a stacked leading layer dim (scan groups) or not.
+
+Conventions (DESIGN.md §2):
+
+* ``model`` — tensor / expert parallel: column dims of up-projections,
+  row dims of down-projections, vocab of the (un)embedding, the expert
+  dim of MoE stacks, the sequence dim of decode caches and the residual.
+* ``data`` (+ ``pod`` on multi-pod meshes) — the batch dim of inputs,
+  plus FSDP-style sharding of the non-model dim of large weights; the
+  MLfabric gradient path strips these entries back to replicated
+  (``launch/steps.py``, DESIGN.md §3).
+
+Every spec is a *hint* validated against the actual mesh: an axis that
+does not evenly divide the corresponding dim is dropped (reduced smoke
+configs, odd head counts), never erroring.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..configs.shapes import ShapeConfig
+from .policy import _axis_size, _fit_spec
+
+Params = Any
+
+
+# --------------------------------------------------------------------------- #
+# mesh topology helpers
+# --------------------------------------------------------------------------- #
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes the global batch (and gradient reduction) spans."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def batch_spec_axes(mesh: Mesh, global_batch: int) -> Optional[Tuple[str, ...]]:
+    """Axes to shard the batch dim over, or None when nothing fits.
+
+    Prefers the full ``(pod, data)`` hierarchy, falls back to ``data``
+    alone when the batch is not divisible by the pod product (small eval
+    batches on the multi-pod mesh).
+    """
+    for axes in (data_axes(mesh), ("data",)):
+        if set(axes) <= set(mesh.axis_names) \
+                and global_batch % _axis_size(mesh, tuple(axes)) == 0:
+            return tuple(axes)
+    return None
+
+
+def head_policy(cfg: ModelConfig, mesh: Mesh) -> bool:
+    """True when attention heads split evenly over the model axis, i.e.
+    head-parallel attention is available without padding/resharding."""
+    m = mesh.shape.get("model", 1)
+    heads = max(cfg.n_heads, 1)
+    kv_heads = max(cfg.n_kv_heads, 1)
+    return heads % m == 0 and kv_heads % m == 0
+
+
+# --------------------------------------------------------------------------- #
+# parameters
+# --------------------------------------------------------------------------- #
+_COL = ("data", "model")    # [d_in, d_out]: FSDP the input, TP the output
+_ROW = ("model", "data")    # [d_in, d_out]: TP the input, FSDP the output
+_EXP = ("model", "data", None)  # [E, d_in, d_out]: expert parallel + FSDP
+
+_PARAM_RULES: Dict[str, Tuple] = {
+    # embeddings
+    "embed": ("model", "data"), "lm_head": _COL,
+    # dense MLP
+    "up": _COL, "gate": _COL, "down": _ROW,
+    # attention (GQA) — wk/wv/wr/wg double as the RWKV projections
+    "wq": _COL, "wk": _COL, "wv": _COL, "wg": _COL, "wr": _COL, "wo": _ROW,
+    # MLA
+    "q_down": _COL, "kv_down": _COL,
+    "q_up": _COL, "k_up": _COL, "v_up": _COL,
+    # mamba
+    "in_x": _COL, "in_z": _COL, "x_proj": ("model", None), "dt_proj": _COL,
+    "conv_w": (None, "model"), "a_log": ("model", None), "out_proj": _ROW,
+    # rwkv extras
+    "ts_down": _COL, "ts_up": (None, None, "model"),
+    "wd_down": _COL, "wd_up": _COL,
+    # MoE expert stacks; the router is tiny and stays replicated (f32)
+    "w_gate": _EXP, "w_up": _EXP, "w_down": _EXP,
+    "router": (None, None),
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        key = getattr(entry, "key", None)
+        if isinstance(key, str):
+            return key
+    return ""
+
+
+def _rule_sharding(mesh: Mesh, rule: Tuple, shape: Tuple[int, ...]
+                   ) -> NamedSharding:
+    rule = tuple(rule)[-len(shape):] if rule else ()
+    spec = (None,) * (len(shape) - len(rule)) + rule
+    return NamedSharding(mesh, _fit_spec(mesh, P(*spec), shape))
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, abstract: Params) -> Params:
+    """Full-rank ``NamedSharding`` per param leaf, for every arch.
+
+    ``abstract`` is the ``eval_shape`` pytree of ``init_params``; the
+    result mirrors its structure leaf-for-leaf (the jit in/out sharding
+    contract in ``launch/steps.py``).
+    """
+    del cfg  # rules are name-based; the config shaped the abstract tree
+
+    def one(path, leaf):
+        rule = _PARAM_RULES.get(_leaf_name(path), ())
+        return _rule_sharding(mesh, rule, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(one, abstract)
+
+
+# --------------------------------------------------------------------------- #
+# inputs
+# --------------------------------------------------------------------------- #
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    batch_specs: Params) -> Params:
+    """Batch-dim sharding for the model-input pytree: dim 0 over the data
+    hierarchy when it is the global batch, everything else replicated."""
+    ba = batch_spec_axes(mesh, shape.global_batch)
+
+    def one(leaf):
+        if leaf.ndim and ba and leaf.shape[0] == shape.global_batch:
+            return NamedSharding(
+                mesh, _fit_spec(mesh, P(ba, *([None] * (leaf.ndim - 1))),
+                                leaf.shape))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, batch_specs)
+
+
+# --------------------------------------------------------------------------- #
+# decode caches
+# --------------------------------------------------------------------------- #
+# Trailing-dim rules per cache leaf (after the leading stacked-layer dim);
+# "B" marks the batch dim (-> data hierarchy), "model" the sequence (or
+# state) dim per the cache layout contract in models/transformer.py.
+_CACHE_RULES: Dict[str, Tuple] = {
+    "k": ("B", "model", None, None), "v": ("B", "model", None, None),
+    "k_q": ("B", "model", None, None), "v_q": ("B", "model", None, None),
+    "k_s": ("B", "model", None), "v_s": ("B", "model", None),
+    "ckv": ("B", "model", None), "krope": ("B", "model", None),
+    "conv": ("B", None, "model"), "ssm": ("B", "model", None),
+    "shift": ("B", None, "model"), "cm_shift": ("B", None, "model"),
+    "wkv": ("B", "model", None, None),
+    "cross_kv": ("B", "model", None, None),
+}
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_abs: Params,
+                    global_batch: int) -> Params:
+    ba = batch_spec_axes(mesh, global_batch)
+
+    def one(path, leaf):
+        rule = _CACHE_RULES.get(_leaf_name(path), ("B",))
+        rule = tuple(ba if e == "B" else e for e in rule) if ba else \
+            tuple(None if e == "B" else e for e in rule)
+        return _rule_sharding(mesh, rule, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(one, cache_abs)
+
+
+# --------------------------------------------------------------------------- #
+# activations
+# --------------------------------------------------------------------------- #
+def activation_policy(cfg: ModelConfig, mesh: Mesh,
+                      global_batch: int) -> Dict[str, P]:
+    """Named activation constraints for ``dist.policy.sharding_policy``.
+
+    * ``residual`` [B, S, D]: batch over the data hierarchy, sequence over
+      ``model`` (sequence parallel — norms act on the unsharded D).
+    * ``logits``  [B, V]: vocab over ``model`` (the unembed matmul's
+      natural output layout; the loss gathers per-token gold logits).
+    """
+    ba = batch_spec_axes(mesh, global_batch)
+    b = ba if ba else None
+    return {"residual": P(b, "model", None), "logits": P(b, "model")}

@@ -7,7 +7,8 @@ never touches jax device state — required by the dry-run contract.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from ..dist.compat import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -19,16 +20,15 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over the real local devices (smoke tests / examples)."""
     n = len(jax.devices())
     data = min(data, n)
-    return jax.make_mesh((data, max(n // data, 1))[:2], ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((data, max(n // data, 1)), ("data", "model"),
+                     axis_types=(AxisType.Auto, AxisType.Auto))
 
 
 def batch_axes(mesh) -> tuple:

@@ -3,6 +3,9 @@
 import math
 
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the hypothesis package")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.delay import (DelayTracker, adadelay_lr, bounded_delay_lr,

@@ -4,12 +4,15 @@ The multi-device tests run in a subprocess (XLA_FLAGS must be set before
 jax initializes, which pytest has already done in this process).
 """
 
+import os
 import subprocess
 import sys
 import textwrap
 
 import jax
 import pytest
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 from repro.configs import get_config
 from repro.dist import sharding as shd
@@ -47,14 +50,14 @@ _MULTIDEV_SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import sys; sys.path.insert(0, "src")
     import dataclasses, jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import AxisType
     from repro.configs import get_config, get_shape
+    from repro.dist.compat import AxisType, make_mesh
     from repro.launch.steps import build_step
     from repro.optim.sgd import momentum_sgd_init
     from repro.models import transformer as tf
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
     cfg = get_config("stablelm-1.6b").reduced()
     shape = dataclasses.replace(get_shape("train_4k"), seq_len=128,
                                 global_batch=4)
@@ -89,8 +92,67 @@ def test_mlfabric_grad_path_matches_auto():
     2x4 mesh, reduced stablelm)."""
     res = subprocess.run([sys.executable, "-c", _MULTIDEV_SCRIPT],
                          capture_output=True, text=True, timeout=600,
-                         cwd="/root/repo")
+                         cwd=_REPO_ROOT)
     assert "MLFABRIC_PATH_OK" in res.stdout, res.stderr[-2000:]
+
+
+_COLLECTIVES_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys; sys.path.insert(0, "src")
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.collectives import mlfabric_grad_reduce
+    from repro.dist.compat import make_mesh, shard_map
+
+    mesh = make_mesh((2, 4), ("pod", "data"))
+    rng = np.random.default_rng(0)
+    # one gradient slice per device on the leading dim (2 pods x 4 workers)
+    grads = {
+        "w1": jnp.asarray(rng.normal(size=(8, 33, 7)), jnp.float32),
+        "w2": jnp.asarray(rng.normal(size=(8, 512)), jnp.float32),
+        "bias": jnp.asarray(rng.normal(size=(8, 5)), jnp.float32),
+        "big": jnp.asarray(rng.normal(size=(8, 3000)), jnp.float32),
+    }
+    ref = {k: np.mean(np.asarray(v), axis=0, keepdims=True)
+           for k, v in grads.items()}
+
+    def reduce_with(**kw):
+        def body(g):
+            return mlfabric_grad_reduce(g, intra_axis="data",
+                                        inter_axis="pod", mean_over=8, **kw)
+        specs = jax.tree.map(lambda _: P(("pod", "data")), grads)
+        outs = jax.tree.map(lambda _: P(), grads)
+        f = jax.jit(shard_map(body, mesh=mesh, in_specs=(specs,),
+                              out_specs=outs, check_vma=False))
+        return jax.device_get(f(grads))
+
+    cases = {
+        "default": dict(),
+        "tiny_buckets": dict(bucket_bytes=1024),
+        "fifo": dict(shortest_first=False),
+        "compressed": dict(compress_inter=True),
+    }
+    for name, kw in cases.items():
+        got = reduce_with(**kw)
+        tol = dict(rtol=5e-2, atol=5e-2) if name == "compressed" \\
+            else dict(rtol=1e-5, atol=1e-5)
+        for k in grads:
+            np.testing.assert_allclose(got[k], ref[k], err_msg=(name, k),
+                                       **tol)
+        print(name, "ok")
+    print("COLLECTIVES_NUMERICS_OK")
+""")
+
+
+@pytest.mark.slow
+def test_mlfabric_grad_reduce_matches_psum_mean():
+    """Bucketed / shortest-first / int8-compressed hierarchical reduction
+    equals a plain psum mean on a 2-pod x 4-worker host mesh."""
+    res = subprocess.run([sys.executable, "-c", _COLLECTIVES_SCRIPT],
+                         capture_output=True, text=True, timeout=600,
+                         cwd=_REPO_ROOT)
+    assert "COLLECTIVES_NUMERICS_OK" in res.stdout, res.stderr[-2000:]
 
 
 def test_gradient_accumulation_matches_full_batch():

@@ -1,5 +1,9 @@
 """Hypothesis property tests over the scheduling invariants (system-level)."""
 
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the hypothesis package")
 import hypothesis.strategies as st
 from hypothesis import given, settings
 
