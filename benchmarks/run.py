@@ -22,6 +22,7 @@ from repro.core import (C1, C2, C3, N1, N2, N3, N_STATIC, ClusterSim,
                         SchedulerConfig, SyncSim, Update, aggregate_updates,
                         gbps, mb)
 from repro.core.simulator import BandwidthModel, StragglerModel
+from repro.scenarios import paper_dynamic_cluster
 
 ROWS = []
 
@@ -161,6 +162,74 @@ def bench_fig9_replication_savings():
     record("fig9_replication_vs_divmax", dt, ";".join(out))
 
 
+def bench_dynamic_cluster():
+    """The paper's headline table: dynamic cluster (C2 stragglers + N2
+    bandwidth + churn/failure/congestion timeline), MLfabric-A vs vanilla
+    fair-share async vs RR-Sync, 64 workers, identical scenario.  500 ms
+    batching lets aggregation form multi-update groups (the paper's
+    incast relief), which is where the >= 2x commit throughput comes from:
+    fair sharing ships every update through the server NIC, MLfabric ships
+    one aggregate per group."""
+    compute, size, horizon, n = 0.05, mb(100), 30.0, 64
+    t0 = time.perf_counter()
+    scen = paper_dynamic_cluster(n, seed=0, horizon=horizon)
+    cfg = SchedulerConfig(server="server",
+                          aggregators=[f"worker{i}" for i in range(16)],
+                          tau_max=100, mode="async", batch_interval=0.5)
+    fab = ClusterSim(n, cfg, update_size=size, compute_time=compute,
+                     straggler=C2, bandwidth=N2, seed=7,
+                     scenario=paper_dynamic_cluster(n, seed=0, horizon=horizon)
+                     ).run(until_time=horizon)
+    van = FairShareAsync(n, update_size=size, compute_time=compute,
+                         straggler=C2, bandwidth=N2, seed=7,
+                         scenario=scen).run(until_time=horizon)
+    sync = SyncSim(n, update_size=size, compute_time=compute, straggler=C2,
+                   bandwidth=N2, seed=7,
+                   scenario=paper_dynamic_cluster(n, seed=0, horizon=horizon))
+    sres = sync.run(int(horizon / 0.3))
+    sync_per_grad = sres.mean_iteration / n
+    agg_frac = sum(1 for c in fab.commits if c.aggregated) / max(fab.n_commits, 1)
+    dt = time.perf_counter() - t0
+    record("dynamic_cluster_c2n2_churn", dt,
+           f"mlfabric={fab.commit_rate:.1f}commits/s"
+           f"(agg={agg_frac:.0%},joins={fab.joins},leaves={fab.leaves});"
+           f"fairshare={van.commit_rate:.1f}commits/s;"
+           f"rrsync={1.0/max(sync_per_grad,1e-9):.1f}grads/s;"
+           f"speedup_vs_fairshare={fab.commit_rate/max(van.commit_rate,1e-9):.2f}x")
+
+
+def bench_incremental_planner():
+    """Planner hot path: 64-update batch, 8 aggregators, Alg. 3 makespan
+    objective — the incremental planner must match the exhaustive
+    enumerator's plan while being >= 5x faster (re-planning runs on every
+    topology change in dynamic clusters)."""
+    import random as _random
+    n, k = 64, 8
+    times = {}
+    results = {}
+    for planner in ("exhaustive", "incremental"):
+        best = float("inf")
+        for _ in range(3):
+            rng = _random.Random(1)
+            net = NetworkState([f"w{i}" for i in range(n)] + ["s"] +
+                               [f"a{i}" for i in range(k)], gbps(10))
+            ups = [Update(uid=i, worker=f"w{i}", size=mb(100), version=0,
+                          t_avail=rng.uniform(0, 0.05)) for i in range(n)]
+            t0 = time.perf_counter()
+            res = aggregate_updates(ups, net, "s",
+                                    [f"a{i}" for i in range(k)],
+                                    objective="makespan", planner=planner)
+            best = min(best, time.perf_counter() - t0)
+        times[planner], results[planner] = best, res
+    equal = abs(results["exhaustive"].makespan
+                - results["incremental"].makespan) < 1e-9
+    record("incremental_planner_u64", times["exhaustive"] + times["incremental"],
+           f"exhaustive={times['exhaustive']*1e3:.0f}ms;"
+           f"incremental={times['incremental']*1e3:.0f}ms;"
+           f"speedup={times['exhaustive']/times['incremental']:.1f}x;"
+           f"equal_makespan={equal}")
+
+
 def bench_sec74_scheduler_scaling():
     """§7.4: scheduler decision time vs batch size |U| (quadratic)."""
     import random
@@ -237,6 +306,8 @@ def main() -> None:
     bench_fig7_delay_convergence()
     bench_fig8_bandwidth_aware_routing()
     bench_fig9_replication_savings()
+    bench_dynamic_cluster()
+    bench_incremental_planner()
     bench_sec74_scheduler_scaling()
     bench_roofline_summary()
     bench_kernel_flash_attention()

@@ -11,3 +11,17 @@ import sys
 _SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
+
+# Hypothesis profiles: "ci" (select with --hypothesis-profile=ci) runs the
+# property suites deterministically — fixed seed via derandomize, deadline
+# disabled (shared runners have noisy clocks).  "dev" keeps random search
+# but also drops the deadline, since the simulator tests do real work.
+try:
+    from hypothesis import settings
+
+    settings.register_profile("ci", max_examples=60, deadline=None,
+                              derandomize=True, print_blob=True)
+    settings.register_profile("dev", deadline=None)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
+except ImportError:
+    pass

@@ -8,6 +8,7 @@ Layers (bottom-up):
 * ``replication`` — §5.3 bounded-consistency replication (norm-bound, eq. 10)
 * ``delay``       — §3.1 delay management / adaptive LR (eq. 4)
 * ``scheduler``   — §4 batch scheduler composing the three algorithms
+* ``scenario``    — dynamic-cluster event timelines (join/leave/fail/traces)
 * ``simulator``   — §7 discrete-event cluster harness (C/N settings)
 * ``baselines``   — vanilla async PS, RR-Sync, Tr-Sync comparisons
 * ``optimal``     — §10.1 exact reference for tiny instances
@@ -20,6 +21,9 @@ from .replication import (ReplicationResult, ReplicationState,
                           divergence_bound, plan_replication)
 from .delay import DelayTracker, adadelay_lr, bounded_delay_lr, convergence_bound
 from .scheduler import BatchPlan, MLfabricScheduler, SchedulerConfig
+from .scenario import (AggregatorFail, BandwidthTrace, MonitorLagChange,
+                       Scenario, ScenarioEvent, WorkerJoin, WorkerLeave,
+                       bandwidth_trace)
 from .simulator import (BandwidthModel, ClusterSim, CommitRecord, SimResult,
                         StragglerModel, C1, C2, C3, N1, N2, N3, N_STATIC)
 from .baselines import (FairShareAsync, SyncSim, max_min_rates,
@@ -34,6 +38,8 @@ __all__ = [
     "plan_replication",
     "DelayTracker", "adadelay_lr", "bounded_delay_lr", "convergence_bound",
     "BatchPlan", "MLfabricScheduler", "SchedulerConfig",
+    "Scenario", "ScenarioEvent", "WorkerJoin", "WorkerLeave",
+    "AggregatorFail", "BandwidthTrace", "MonitorLagChange", "bandwidth_trace",
     "BandwidthModel", "ClusterSim", "CommitRecord", "SimResult",
     "StragglerModel", "C1", "C2", "C3", "N1", "N2", "N3", "N_STATIC",
     "FairShareAsync", "SyncSim", "max_min_rates", "ring_allreduce_time",

@@ -21,6 +21,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from .delay import DelayTracker
 from .network import gbps
+from .scenario import (AggregatorFail, BandwidthTrace, MonitorLagChange,
+                       Scenario, ScenarioEvent, WorkerJoin, WorkerLeave)
 from .simulator import BandwidthModel, CommitRecord, N_STATIC, SimResult, StragglerModel, C1
 
 
@@ -61,29 +63,86 @@ def max_min_rates(flows: Sequence[Tuple[int, str, str]],
 
 
 class FairShareAsync:
-    """Vanilla PS-async simulator: concurrent fair-shared pushes (Fig. 1a)."""
+    """Vanilla PS-async simulator: concurrent fair-shared pushes (Fig. 1a).
+
+    Supports the same dynamic-cluster ``scenario`` timelines as
+    ``ClusterSim`` so the paper's churn comparison is apples-to-apples:
+    joins add a computing worker, leaves kill the worker's in-flight flow
+    (the update is lost), bandwidth traces override NIC rates.  Monitor-lag
+    events are no-ops (there is no scheduler to mislead) and aggregator
+    failures are no-ops (there are no aggregators).
+    """
 
     def __init__(self, n_workers: int, server: str = "server", *,
                  update_size: float, compute_time: float = 0.1,
                  straggler: StragglerModel = C1,
                  bandwidth: BandwidthModel = N_STATIC,
-                 default_bw: float = gbps(10), seed: int = 0):
+                 default_bw: float = gbps(10), seed: int = 0,
+                 scenario: Optional[Scenario] = None):
         self.workers = [f"worker{i}" for i in range(n_workers)]
         self.server = server
         self.update_size = update_size
         self.compute_time = compute_time
         self.straggler = straggler
         self.bandwidth = bandwidth
+        self.default_bw = default_bw
         self.rng = random.Random(seed)
         self.up = {h: default_bw for h in self.workers + [server]}
         self.down = dict(self.up)
         self.result = SimResult()
+        self.scenario = scenario
         self._uid = itertools.count()
+        self._dead: set = set()
+        self._next_worker_id = n_workers
+
+    # -- scenario hook -------------------------------------------------- #
+    def apply_event(self, t: float, ev: ScenarioEvent,
+                    compute_done: List[Tuple[float, str]],
+                    flows: Dict[int, List]) -> None:
+        if isinstance(ev, WorkerJoin):
+            name = ev.worker
+            if name is None:
+                while f"worker{self._next_worker_id}" in self.up:
+                    self._next_worker_id += 1
+                name = f"worker{self._next_worker_id}"
+                self._next_worker_id += 1
+            if name in self.workers:
+                return  # already alive: no second compute loop
+            self.up[name] = ev.up if ev.up is not None else self.default_bw
+            self.down[name] = ev.down if ev.down is not None else self.default_bw
+            self._dead.discard(name)
+            self.workers.append(name)
+            heapq.heappush(compute_done,
+                           (t + self.compute_time * self.straggler.sample(self.rng),
+                            name))
+            self.result.joins += 1
+        elif isinstance(ev, WorkerLeave):
+            if ev.worker in self._dead or ev.worker not in self.workers:
+                return
+            self.workers.remove(ev.worker)
+            self._dead.add(ev.worker)
+            self.result.leaves += 1
+            for fid in [fid for fid, f in flows.items() if f[1] == ev.worker]:
+                flows.pop(fid)
+                self.result.scenario_drops += 1
+                self.result.drops += 1
+        elif isinstance(ev, BandwidthTrace):
+            if ev.host in self.up and ev.host not in self._dead:
+                if ev.up is not None:
+                    self.up[ev.host] = ev.up
+                if ev.down is not None:
+                    self.down[ev.host] = ev.down
+        elif isinstance(ev, (AggregatorFail, MonitorLagChange)):
+            pass  # vanilla async has neither aggregators nor a monitor
+        else:
+            raise TypeError(f"unknown scenario event {ev!r}")
+        self.result.scenario_events_applied += 1
 
     def run(self, *, until_time: float = math.inf,
             until_commits: int = 10 ** 9) -> SimResult:
         t = 0.0
         next_bw = self.bandwidth.period
+        pending_events = list(self.scenario) if self.scenario else []
         # flow state: fid -> [remaining_bytes, worker, version_used]
         flows: Dict[int, List] = {}
         compute_done: List[Tuple[float, str]] = []
@@ -96,7 +155,8 @@ class FairShareAsync:
             rates = max_min_rates([(fid, f[1], self.server)
                                    for fid, f in flows.items()],
                                   self.up, self.down)
-            # next event: flow completion, compute done, or bandwidth change
+            # next event: flow completion, compute done, bandwidth change,
+            # or the next scenario event
             t_flow, fid_done = math.inf, None
             for fid, f in flows.items():
                 r = rates.get(fid, 0.0)
@@ -105,14 +165,17 @@ class FairShareAsync:
                     if eta < t_flow:
                         t_flow, fid_done = eta, fid
             t_comp = compute_done[0][0] if compute_done else math.inf
-            t_next = min(t_flow, t_comp, next_bw, until_time)
+            t_scen = pending_events[0].time if pending_events else math.inf
+            t_next = min(t_flow, t_comp, next_bw, t_scen, until_time)
             # progress all flows to t_next
             for fid, f in flows.items():
                 f[0] -= rates.get(fid, 0.0) * (t_next - t)
             t = t_next
             if t >= until_time:
                 break
-            if t == t_flow and fid_done is not None:
+            if t == t_scen:
+                self.apply_event(t, pending_events.pop(0), compute_done, flows)
+            elif t == t_flow and fid_done is not None:
                 _, w, v_used = flows.pop(fid_done)
                 rec = CommitRecord(time=t, worker=w, uid=fid_done,
                                    version_used=v_used,
@@ -121,11 +184,13 @@ class FairShareAsync:
                 self.result.commits.append(rec)
                 self.result.delay.record(rec.delay)
                 self.result.bytes_to_server += self.update_size
+                self.result.bytes_in_network += self.update_size
                 heapq.heappush(compute_done,
                                (t + self.compute_time * self.straggler.sample(self.rng), w))
             elif t == t_comp:
                 _, w = heapq.heappop(compute_done)
-                flows[next(self._uid)] = [self.update_size, w, v_server]
+                if w not in self._dead:
+                    flows[next(self._uid)] = [self.update_size, w, v_server]
             elif t == next_bw:
                 for h in self.workers:
                     self.up[h] = self.bandwidth.sample(self.rng)
@@ -184,13 +249,19 @@ class SyncResult:
 
 
 class SyncSim:
-    """RR-Sync / Tr-Sync driver under straggler + bandwidth settings."""
+    """RR-Sync / Tr-Sync driver under straggler + bandwidth settings.
+
+    Scenario support is membership-only (synchronous SGD must reform the
+    ring/tree at an iteration boundary anyway): ``WorkerJoin`` /
+    ``WorkerLeave`` events grow/shrink the participant count at the first
+    boundary after their time; other events are ignored.
+    """
 
     def __init__(self, n_workers: int, *, update_size: float,
                  compute_time: float = 0.1, straggler: StragglerModel = C1,
                  bandwidth: BandwidthModel = N_STATIC,
                  default_bw: float = gbps(10), variant: str = "ring",
-                 seed: int = 0):
+                 seed: int = 0, scenario: Optional[Scenario] = None):
         self.n = n_workers
         self.update_size = update_size
         self.compute_time = compute_time
@@ -199,13 +270,29 @@ class SyncSim:
         self.default_bw = default_bw
         self.variant = variant
         self.rng = random.Random(seed)
+        self.scenario = scenario
 
     def run(self, n_iterations: int) -> SyncResult:
         res = SyncResult()
         t = 0.0
+        names = [f"worker{i}" for i in range(self.n)]
         bws = [self.default_bw] * self.n
         next_bw = self.bandwidth.period
+        next_id = self.n
+        pending = [e for e in (self.scenario or [])
+                   if isinstance(e, (WorkerJoin, WorkerLeave))]
         for it in range(n_iterations):
+            while pending and pending[0].time <= t:
+                ev = pending.pop(0)
+                if isinstance(ev, WorkerJoin):
+                    names.append(ev.worker or f"worker{next_id}")
+                    next_id += 1
+                    bws.append(ev.up if ev.up is not None else self.default_bw)
+                elif len(names) > 1 and ev.worker in names:
+                    i = names.index(ev.worker)  # drop THIS worker's NIC slot
+                    names.pop(i)
+                    bws.pop(i)
+                self.n = len(names)
             comp = max(self.compute_time * self.straggler.sample(self.rng)
                        for _ in range(self.n))
             if self.variant == "ring":

@@ -300,12 +300,28 @@ class NetworkState:
     # -- mutation ---------------------------------------------------------- #
     def reserve(self, src: str, dst: str, size: float, t_avail: float) -> Transfer:
         """Reserve bottleneck bandwidth for the transfer (Fig. 4(c))."""
+        tr = self.plan_transfer(src, dst, size, t_avail)
+        if tr is None:
+            raise RuntimeError(f"transfer {src}->{dst} of {size}B can never finish")
+        self.commit_transfer(tr)
+        return tr
+
+    def plan_transfer(self, src: str, dst: str, size: float,
+                      t_avail: float) -> Optional[Transfer]:
+        """Profile a transfer WITHOUT reserving (``None`` if unfinishable).
+
+        Pairs with :meth:`commit_transfer`; lets planners inspect the
+        completion time and reserve without recomputing the profile.
+        """
         prof = make_profile(self.residual(src, dst), t_avail, size)
         if prof is None:
-            raise RuntimeError(f"transfer {src}->{dst} of {size}B can never finish")
-        for link in self.path(src, dst):
-            link.subtract_profile(prof)
+            return None
         return Transfer(next(self._uid), src, dst, size, t_avail, prof)
+
+    def commit_transfer(self, transfer: Transfer) -> None:
+        """Apply a planned transfer's reservation to the residual links."""
+        for link in self.path(transfer.src, transfer.dst):
+            link.subtract_profile(transfer.profile)
 
     def release(self, transfer: Transfer) -> None:
         """Undo a reservation (used by replication's lead-reduction, §5.3)."""

@@ -36,6 +36,7 @@ class SchedulerConfig:
     gamma: float = 0.9                     # server momentum (eq. 2)
     batch_interval: float = 0.1            # 100 ms batching (paper §7)
     mode: str = "async"                    # "async" | "sync" (§6)
+    planner: str = "incremental"           # Alg. 3 planner ("exhaustive" ref)
 
 
 @dataclass
@@ -90,7 +91,7 @@ class MLfabricScheduler:
                                       transfers={}, network=network)
             agg = aggregate_updates(ordering.order, network, cfg.server,
                                     cfg.aggregators, t_now=t_now,
-                                    objective="makespan")
+                                    objective="makespan", planner=cfg.planner)
         else:
             # Plan the order on a scratch copy (reservations are re-made by
             # the aggregation pass, which owns the concrete schedules).
@@ -99,7 +100,8 @@ class MLfabricScheduler:
                                      t_now=t_now)
             agg = aggregate_updates(ordering.order, network, cfg.server,
                                     cfg.aggregators, t_now=t_now,
-                                    objective="avg_commit")
+                                    objective="avg_commit",
+                                    planner=cfg.planner)
 
         replication: Optional[ReplicationResult] = None
         if cfg.replica is not None:

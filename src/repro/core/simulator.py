@@ -13,10 +13,22 @@ Two fidelity modes share the same event loop:
 * **training mode**: the caller provides ``on_compute`` / ``on_commit``
   callbacks that move real tensors (see ``repro/ps/async_trainer.py``); the
   simulator decides *when/what order*, the trainer decides *values*.
+
+Dynamic clusters (the paper's "realistic dynamic cluster settings"): pass a
+``scenario`` — a time-sorted list of :mod:`repro.core.scenario` events — and
+the simulator applies each through :meth:`ClusterSim.apply_event`: workers
+join (and start computing) or leave (their pending and in-flight updates are
+dropped), aggregator roles fail (in-flight groups through them are
+re-routed: members go back to the pending pool and the next batch re-plans
+them on the surviving topology), per-host bandwidth follows a trace, and the
+monitor's lag changes mid-run.  Membership changes reach the scheduler
+immediately (control-plane events, unlike data-plane bandwidth which is
+monitor-lagged).
 """
 
 from __future__ import annotations
 
+import dataclasses
 import heapq
 import itertools
 import math
@@ -27,6 +39,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 from .delay import DelayTracker
 from .network import NetworkState, gbps, mb
 from .ordering import Update
+from .scenario import (AggregatorFail, BandwidthTrace, MonitorLagChange,
+                       Scenario, ScenarioEvent, WorkerJoin, WorkerLeave)
 from .scheduler import BatchPlan, MLfabricScheduler, SchedulerConfig
 
 
@@ -93,9 +107,18 @@ class SimResult:
     delay: DelayTracker = field(default_factory=DelayTracker)
     bytes_to_server: float = 0.0
     bytes_to_replica: float = 0.0
+    # every byte that crossed any link on the update path: member->aggregator
+    # hops plus everything in ``bytes_to_server`` (direct + aggregate hops).
+    bytes_in_network: float = 0.0
     replica_divergence_trace: List[Tuple[float, float]] = field(default_factory=list)
     scheduler_batches: int = 0
     scheduler_wall_time: float = 0.0
+    # dynamic-cluster accounting:
+    scenario_events_applied: int = 0
+    scenario_drops: int = 0       # updates lost to WorkerLeave
+    reroutes: int = 0             # in-flight updates re-planned (agg death)
+    joins: int = 0
+    leaves: int = 0
 
     @property
     def n_commits(self) -> int:
@@ -114,6 +137,7 @@ class ClusterSim:
 
     Hosts: ``worker0..N-1``, ``server``, optional ``replica``; aggregators
     are co-hosted with workers (paper §7) and named by their host.
+    Membership is dynamic when a ``scenario`` is given.
     """
 
     def __init__(
@@ -129,31 +153,47 @@ class ClusterSim:
         default_bw: float = gbps(10),
         monitor_lag: float = 0.2,
         seed: int = 0,
+        scenario: Optional[Scenario] = None,
         on_compute: Optional[Callable[[str, int], Tuple[float, float]]] = None,
         on_commit: Optional[Callable[[CommitRecord], None]] = None,
         on_drop: Optional[Callable[[str, int], None]] = None,
+        on_join: Optional[Callable[[str, float], None]] = None,
     ):
         self.n_workers = n_workers
         self.workers = [f"worker{i}" for i in range(n_workers)]
-        self.cfg = scheduler_config
+        # Own copy: the roster mutates on topology events and must never
+        # leak into (or be detached by) other sims sharing the caller's
+        # config object.
+        self.cfg = dataclasses.replace(
+            scheduler_config, aggregators=list(scheduler_config.aggregators))
         self.update_size = update_size
         self.model_size = model_size if model_size is not None else update_size
         self.compute_time = compute_time
         self.straggler = straggler
         self.bandwidth = bandwidth
+        self.default_bw = default_bw
         self.monitor_lag = monitor_lag
         self.rng = random.Random(seed)
+        self.scenario = scenario
         self.on_compute = on_compute
         self.on_commit = on_commit
         self.on_drop = on_drop
+        self.on_join = on_join
 
-        hosts = list(self.workers) + [scheduler_config.server]
-        if scheduler_config.replica:
-            hosts.append(scheduler_config.replica)
+        hosts = list(self.workers) + [self.cfg.server]
+        if self.cfg.replica:
+            hosts.append(self.cfg.replica)
         self.net_actual = NetworkState(hosts, default_bw)
         self.net_lagged = NetworkState(hosts, default_bw)
 
-        self.scheduler = MLfabricScheduler(scheduler_config)
+        # Live aggregator roster: the scheduler reads ``cfg.aggregators`` on
+        # every batch, so aliasing the list makes topology changes take
+        # effect at the very next re-plan.  Failed slots are refilled by
+        # joining workers, up to the initial roster size.
+        self.aggregators: List[str] = self.cfg.aggregators
+        self._initial_agg_count = len(self.aggregators)
+
+        self.scheduler = MLfabricScheduler(self.cfg)
         self.result = SimResult()
 
         self._uid = itertools.count()
@@ -162,6 +202,12 @@ class ClusterSim:
         self._pending: List[Update] = []      # push requests awaiting a batch
         self._uid_meta: Dict[int, dict] = {}  # uid -> {worker, version}
         self.v_server = 0                     # committed model version
+
+        # dynamic-membership state
+        self._dead: set = set()                    # departed workers
+        self._inflight: Dict[int, dict] = {}       # uid -> {update, aggregator}
+        self._commit_epoch: Dict[int, int] = {}    # uid -> live event epoch
+        self._next_worker_id = n_workers
 
     # ------------------------------------------------------------------ #
     def _push_event(self, t: float, kind: str, **payload) -> None:
@@ -177,6 +223,9 @@ class ClusterSim:
         if self.bandwidth.period < math.inf:
             self._push_event(self.bandwidth.period, "bw_change")
         self._push_event(self.cfg.batch_interval, "batch")
+        if self.scenario is not None:
+            for ev in self.scenario:
+                self._push_event(ev.time, "scenario", event=ev)
 
         while self._events:
             t, _, kind, payload = heapq.heappop(self._events)
@@ -186,8 +235,149 @@ class ClusterSim:
             handler(t, **payload)
 
         self.result.sim_time = min(t, until_time)
-        self.result.drops = self.scheduler.n_dropped
+        self.result.drops = self.scheduler.n_dropped + self.result.scenario_drops
         return self.result
+
+    # ------------------------------------------------------------------ #
+    # scenario events (public hook: scenarios drive the event loop here)
+    # ------------------------------------------------------------------ #
+    def apply_event(self, t: float, ev: ScenarioEvent) -> None:
+        """Apply one cluster event at simulator time ``t``."""
+        if isinstance(ev, WorkerJoin):
+            self._apply_join(t, ev)
+        elif isinstance(ev, WorkerLeave):
+            self._apply_leave(t, ev.worker)
+        elif isinstance(ev, AggregatorFail):
+            self._apply_aggregator_fail(t, ev.host)
+        elif isinstance(ev, BandwidthTrace):
+            if ev.host in self.net_actual.up and ev.host not in self._dead:
+                self.net_actual.set_bandwidth(ev.host, t, up=ev.up, down=ev.down)
+                self._push_event(t + self.monitor_lag, "monitor_report",
+                                 host=ev.host, up=ev.up, down=ev.down)
+        elif isinstance(ev, MonitorLagChange):
+            self.monitor_lag = ev.lag
+        else:
+            raise TypeError(f"unknown scenario event {ev!r}")
+        self.result.scenario_events_applied += 1
+
+    def _on_scenario(self, t: float, event: ScenarioEvent) -> None:
+        self.apply_event(t, event)
+
+    def _apply_join(self, t: float, ev: WorkerJoin) -> None:
+        name = ev.worker
+        if name is None:
+            while f"worker{self._next_worker_id}" in self.net_actual.up:
+                self._next_worker_id += 1
+            name = f"worker{self._next_worker_id}"
+            self._next_worker_id += 1
+        if name in self.workers:
+            return  # already alive: a duplicate join must not fork a
+                    # second compute loop for the same host
+        up = ev.up if ev.up is not None else self.default_bw
+        down = ev.down if ev.down is not None else self.default_bw
+        for net in (self.net_actual, self.net_lagged):
+            if name in net.up:        # rejoin of a departed host
+                net.set_bandwidth(name, t, up=up, down=down)
+            else:
+                net.add_host(name, self.default_bw)
+                net.set_bandwidth(name, t, up=up, down=down)
+        self._dead.discard(name)
+        self.workers.append(name)
+        self.n_workers = len(self.workers)
+        # aggregation duty: a joiner refills a failed slot in the roster
+        if len(self.aggregators) < self._initial_agg_count:
+            self.aggregators.append(name)
+        self.result.joins += 1
+        if self.on_join:
+            self.on_join(name, t)
+        self._schedule_compute(name, t)
+
+    def _apply_leave(self, t: float, worker: str) -> None:
+        if worker in self._dead or worker not in self.workers:
+            return
+        self.workers.remove(worker)
+        self._dead.add(worker)
+        self.n_workers = len(self.workers)
+        self.result.leaves += 1
+        # An aggregator-leaver's role fails FIRST: groups through it are
+        # re-routed into the pending pool (including the leaver's own
+        # member updates, which the pending filter below then discards) and
+        # the dead group's reservations are released exactly once.
+        if worker in self.aggregators:
+            self._apply_aggregator_fail(t, worker)
+        # pending (not yet planned) updates from the leaver are lost
+        lost = [u for u in self._pending if u.worker == worker]
+        self._pending = [u for u in self._pending if u.worker != worker]
+        for u in lost:
+            self._drop_lost(u.uid)
+        # in-flight updates *from* the leaver are lost mid-transfer: the
+        # unfinished transfer's reservation is freed and its bytes refunded
+        # (other members of the same aggregation group are unaffected —
+        # each uid commits independently)
+        for uid, info in list(self._inflight.items()):
+            if info["update"].worker == worker:
+                self._cancel_commit(uid)
+                del self._inflight[uid]
+                direct = info["aggregator"] is None
+                size = info["update"].size
+                self._release_unfinished(
+                    t, info["transfer"],
+                    refund_server=size if direct else 0.0,
+                    refund_network=size)
+                self._drop_lost(uid)
+        # membership is control-plane: both network views drop the host now
+        # (after releases, so the dead NIC's timelines end up flat zero)
+        for net in (self.net_actual, self.net_lagged):
+            net.set_bandwidth(worker, t, up=0.0, down=0.0)
+
+    def _apply_aggregator_fail(self, t: float, host: str) -> None:
+        if host in self.aggregators:
+            self.aggregators.remove(host)
+        # Re-route in-flight groups through the dead aggregator: surviving
+        # members return to the pending pool (their gradient is resent from
+        # the worker) and the next batch re-plans them on the new topology.
+        # The dead group's unfinished reservations are freed — otherwise
+        # phantom flows would throttle the retransmissions — and the
+        # never-delivered aggregate's bytes are refunded.
+        released_aggregates: set = set()
+        for uid, info in list(self._inflight.items()):
+            if info["aggregator"] == host:
+                self._cancel_commit(uid)
+                del self._inflight[uid]
+                self._release_unfinished(t, info["transfer"],
+                                         refund_network=info["update"].size)
+                agg_tr = info.get("agg_transfer")
+                if agg_tr is not None and agg_tr.uid not in released_aggregates:
+                    released_aggregates.add(agg_tr.uid)
+                    self._release_unfinished(t, agg_tr,
+                                             refund_server=agg_tr.size,
+                                             refund_network=agg_tr.size)
+                u: Update = info["update"]
+                u.t_avail = t
+                self._pending.append(u)
+                self.result.reroutes += 1
+
+    def _release_unfinished(self, t: float, tr, *, refund_server: float = 0.0,
+                            refund_network: float = 0.0) -> None:
+        """Free a cancelled transfer's reservation and refund its byte
+        counters — but only if it had not already completed by ``t``
+        (delivered bytes stay both reserved-in-the-past and counted)."""
+        if tr is None or tr.t_end <= t:
+            return
+        self.net_actual.release(tr)
+        self.result.bytes_to_server -= refund_server
+        self.result.bytes_in_network -= refund_network
+
+    def _drop_lost(self, uid: int) -> None:
+        meta = self._uid_meta.pop(uid, None)
+        self.result.scenario_drops += 1
+        if meta is not None and self.on_drop:
+            self.on_drop(meta["worker"], meta["version"])
+
+    def _cancel_commit(self, uid: int) -> None:
+        """Invalidate the scheduled commit event for ``uid`` (stale events
+        carry an older epoch and are ignored when they fire)."""
+        self._commit_epoch[uid] = self._commit_epoch.get(uid, 0) + 1
 
     # ------------------------------------------------------------------ #
     # event handlers
@@ -198,6 +388,8 @@ class ClusterSim:
                          worker=worker)
 
     def _on_compute_done(self, t: float, worker: str) -> None:
+        if worker in self._dead:
+            return
         version = self.v_server  # model version the worker pulled
         size, norm = (self.on_compute(worker, version) if self.on_compute
                       else (self.update_size,
@@ -216,8 +408,10 @@ class ClusterSim:
                              host=w, up=up, down=down)
         self._push_event(t + self.bandwidth.period, "bw_change")
 
-    def _on_monitor_report(self, t: float, host: str, up: float,
-                           down: float) -> None:
+    def _on_monitor_report(self, t: float, host: str, up: Optional[float],
+                           down: Optional[float]) -> None:
+        if host in self._dead:
+            return  # departed before the report landed
         self.net_lagged.set_bandwidth(host, t, up=up, down=down)
 
     def _on_batch(self, t: float) -> None:
@@ -242,10 +436,12 @@ class ClusterSim:
             if self.on_drop:
                 self.on_drop(meta["worker"], meta["version"])
             # dropped at the worker itself -> it restarts compute right away
-            self._schedule_compute(meta["worker"], t)
+            if meta["worker"] not in self._dead:
+                self._schedule_compute(meta["worker"], t)
 
         for g in plan.order:
             self._push_event(commit_times[g.uid], "commit", uid=g.uid,
+                             epoch=self._commit_epoch.get(g.uid, 0),
                              aggregated=plan.aggregation.assignment.get(g.uid, 0) != 0)
 
         if plan.replication is not None and plan.replication.frozen:
@@ -255,7 +451,15 @@ class ClusterSim:
                 (t, plan.replication.divergence_after))
 
     def _enact(self, plan: BatchPlan, t_now: float) -> Dict[int, float]:
-        """Replay the plan's structure on the actual network -> true times."""
+        """Replay the plan's structure on the actual network -> true times.
+
+        Byte accounting (pinned by tests against ``AggregationResult``):
+        ``bytes_to_server`` counts only what crosses the server's downlink —
+        each direct update once, and one ``max(member sizes)`` aggregate per
+        aggregator group (summing gradients keeps tensor size, §3.2).
+        Member->aggregator hops never land in ``bytes_to_server``; they are
+        charged to ``bytes_in_network``, which counts every hop.
+        """
         commit: Dict[int, float] = {}
         server = self.cfg.server
         for grp in plan.aggregation.groups:
@@ -265,6 +469,9 @@ class ClusterSim:
                                                  max(g.t_avail, t_now))
                     commit[g.uid] = tr.t_end
                     self.result.bytes_to_server += g.size
+                    self.result.bytes_in_network += g.size
+                    self._inflight[g.uid] = {"update": g, "aggregator": None,
+                                             "transfer": tr}
             else:
                 t_ready = t_now
                 agg_size = 0.0
@@ -273,15 +480,25 @@ class ClusterSim:
                                                  g.size, max(g.t_avail, t_now))
                     t_ready = max(t_ready, tr.t_end)
                     agg_size = max(agg_size, g.size)
+                    self.result.bytes_in_network += g.size
+                    self._inflight[g.uid] = {"update": g,
+                                             "aggregator": grp.aggregator,
+                                             "transfer": tr}
                 if grp.members:
                     tr = self.net_actual.reserve(grp.aggregator, server,
                                                  agg_size, t_ready)
                     self.result.bytes_to_server += agg_size
+                    self.result.bytes_in_network += agg_size
                     for g in grp.members:
                         commit[g.uid] = tr.t_end
+                        self._inflight[g.uid]["agg_transfer"] = tr
         return commit
 
-    def _on_commit(self, t: float, uid: int, aggregated: bool) -> None:
+    def _on_commit(self, t: float, uid: int, aggregated: bool,
+                   epoch: int = 0) -> None:
+        if epoch != self._commit_epoch.get(uid, 0):
+            return  # stale event: the update was re-routed or lost
+        self._inflight.pop(uid, None)
         meta = self._uid_meta.pop(uid)
         rec = CommitRecord(time=t, worker=meta["worker"], uid=uid,
                            version_used=meta["version"],
@@ -293,6 +510,7 @@ class ClusterSim:
         if self.on_commit:
             self.on_commit(rec)
         # worker pulls the fresh model and starts the next mini-batch.
-        pull = self.net_actual.transfer_time(self.cfg.server, meta["worker"],
-                                             self.model_size, t)
-        self._schedule_compute(meta["worker"], pull)
+        if meta["worker"] not in self._dead:
+            pull = self.net_actual.transfer_time(self.cfg.server, meta["worker"],
+                                                 self.model_size, t)
+            self._schedule_compute(meta["worker"], pull)

@@ -17,6 +17,7 @@ import jax
 import numpy as np
 
 from ..core.network import mb
+from ..core.scenario import Scenario
 from ..core.scheduler import SchedulerConfig
 from ..core.simulator import (BandwidthModel, ClusterSim, CommitRecord,
                               N_STATIC, StragglerModel, C1)
@@ -50,14 +51,16 @@ class AsyncTrainer:
                  straggler: StragglerModel = C1,
                  bandwidth: BandwidthModel = N_STATIC,
                  aggregators: int = 2, seed: int = 0,
+                 scenario: Optional[Scenario] = None,
                  eval_fn: Optional[Callable] = None, has_aux: bool = False):
         self.server = ParameterServer(init_params, gamma=gamma)
         self.data_fn = data_fn
         self.eval_fn = eval_fn
+        self._worker_kw = dict(base_lr=base_lr, delay_adaptive=delay_adaptive,
+                               has_aux=has_aux)
+        self._loss_fn = loss_fn
         self.workers = {
-            f"worker{i}": Worker(f"worker{i}", loss_fn, base_lr=base_lr,
-                                 delay_adaptive=delay_adaptive,
-                                 has_aux=has_aux)
+            f"worker{i}": Worker(f"worker{i}", loss_fn, **self._worker_kw)
             for i in range(n_workers)}
         # the (single) in-flight update payload per worker
         self._payloads: Dict[str, Tuple[Params, int]] = {}
@@ -69,10 +72,16 @@ class AsyncTrainer:
         self.sim = ClusterSim(
             n_workers, cfg, update_size=update_size,
             compute_time=compute_time, straggler=straggler,
-            bandwidth=bandwidth, seed=seed,
+            bandwidth=bandwidth, seed=seed, scenario=scenario,
             on_compute=self._on_compute, on_commit=self._on_commit,
-            on_drop=self._on_drop)
+            on_drop=self._on_drop, on_join=self._on_join)
         self.result = AsyncTrainResult()
+
+    # -- dynamic membership (scenario WorkerJoin events) -------------------- #
+    def _on_join(self, worker: str, t: float) -> None:
+        if worker not in self.workers:
+            self.workers[worker] = Worker(worker, self._loss_fn,
+                                          **self._worker_kw)
 
     # -- simulator callbacks ------------------------------------------------ #
     # A worker has at most ONE update in flight (it pulls a new model only

@@ -1,0 +1,7 @@
+"""Pre-built dynamic-cluster scenarios (see ``repro.core.scenario``)."""
+
+from .library import (aggregator_outage, churn, congestion_wave,
+                      degraded_monitor, flash_crowd, paper_dynamic_cluster)
+
+__all__ = ["churn", "aggregator_outage", "flash_crowd", "congestion_wave",
+           "degraded_monitor", "paper_dynamic_cluster"]

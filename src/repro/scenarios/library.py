@@ -1,0 +1,96 @@
+"""Named scenario builders for the paper's dynamic-cluster experiments.
+
+Each builder returns a :class:`repro.core.scenario.Scenario` parameterized
+on cluster size and timing, so benchmarks, examples and tests drive the
+exact same timelines.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Optional, Sequence
+
+from ..core.network import gbps
+from ..core.scenario import (AggregatorFail, BandwidthTrace, MonitorLagChange,
+                             Scenario, ScenarioEvent, WorkerJoin, WorkerLeave,
+                             bandwidth_trace)
+
+
+def churn(n_workers: int, *, leave_at: float = 5.0, rejoin_at: float = 15.0,
+          fraction: float = 0.25, name: str = "churn") -> Scenario:
+    """The paper's dynamic-cluster table: a fraction of workers leaves at
+    ``leave_at`` and the same count of fresh workers joins at ``rejoin_at``.
+
+    The leavers are the *last* workers (so default aggregators, hosted on
+    the first workers, survive — aggregator death is exercised separately
+    by :func:`aggregator_outage`).
+    """
+    n_leave = max(1, int(n_workers * fraction))
+    events: list[ScenarioEvent] = [
+        WorkerLeave(time=leave_at, worker=f"worker{n_workers - 1 - i}")
+        for i in range(n_leave)]
+    events += [WorkerJoin(time=rejoin_at) for _ in range(n_leave)]
+    return Scenario(events, name=name)
+
+
+def aggregator_outage(aggregators: Sequence[str], *, fail_at: float = 4.0,
+                      name: str = "aggregator-outage") -> Scenario:
+    """Every listed aggregator role fails at ``fail_at`` (hosts keep
+    computing): exercises re-routing of in-flight aggregation groups."""
+    return Scenario([AggregatorFail(time=fail_at, host=a) for a in aggregators],
+                    name=name)
+
+
+def flash_crowd(n_joins: int, *, start: float = 2.0, interval: float = 0.5,
+                up: Optional[float] = None, down: Optional[float] = None,
+                name: str = "flash-crowd") -> Scenario:
+    """Workers arrive one-by-one (elastic scale-up under load)."""
+    return Scenario([WorkerJoin(time=start + i * interval, up=up, down=down)
+                     for i in range(n_joins)], name=name)
+
+
+def congestion_wave(workers: Sequence[str], *, start: float = 3.0,
+                    duration: float = 4.0, low=gbps(1), high=gbps(10),
+                    stagger: float = 0.5, name: str = "congestion-wave",
+                    ) -> Scenario:
+    """A rolling background-traffic wave: each host's NIC dips to ``low``
+    for ``duration`` seconds, staggered by ``stagger`` — the trace-driven
+    analogue of the paper's N settings."""
+    events: list[ScenarioEvent] = []
+    for i, w in enumerate(workers):
+        t0 = start + i * stagger
+        events += bandwidth_trace(w, [(t0, low, low),
+                                      (t0 + duration, high, high)])
+    return Scenario(events, name=name)
+
+
+def degraded_monitor(*, at: float = 5.0, lag: float = 2.0,
+                     recover_at: Optional[float] = None,
+                     recovered_lag: float = 0.2,
+                     name: str = "degraded-monitor") -> Scenario:
+    """The bandwidth monitor's report lag degrades (and optionally
+    recovers): the scheduler plans on an increasingly stale network view."""
+    events: list[ScenarioEvent] = [MonitorLagChange(time=at, lag=lag)]
+    if recover_at is not None:
+        events.append(MonitorLagChange(time=recover_at, lag=recovered_lag))
+    return Scenario(events, name=name)
+
+
+def paper_dynamic_cluster(n_workers: int, *, seed: int = 0,
+                          horizon: float = 30.0,
+                          name: str = "paper-dynamic-cluster") -> Scenario:
+    """The composite used by the paper-table benchmark: churn + an
+    aggregator failure + a congestion wave, deterministically derived from
+    ``seed`` so MLfabric and the baselines replay the identical timeline."""
+    rng = random.Random(seed)
+    s = churn(n_workers, leave_at=horizon / 6, rejoin_at=horizon / 2)
+    s = s.merged(aggregator_outage([f"worker{rng.randrange(2)}"],
+                                   fail_at=horizon / 3))
+    wave_hosts = [f"worker{i}" for i in
+                  sorted(rng.sample(range(n_workers), max(2, n_workers // 4)))]
+    s = s.merged(congestion_wave(wave_hosts, start=horizon / 4))
+    return Scenario(list(s.events), name=name)
+
+
+__all__ = ["churn", "aggregator_outage", "flash_crowd", "congestion_wave",
+           "degraded_monitor", "paper_dynamic_cluster"]

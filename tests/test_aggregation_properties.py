@@ -1,0 +1,113 @@
+"""Hypothesis property tests for Alg. 3 aggregation planning.
+
+Two families:
+
+1. Invariants of any plan (either planner): the efficiency constraint (no
+   aggregator-group member beyond the first arrives after the bound set by
+   the previous groups' server arrival — the server NIC is never left
+   fallow) and optimality-vs-direct (the chosen plan never has a worse
+   makespan than the all-direct plan).
+2. Planner equivalence: the incremental planner (memoized prefixes +
+   pruning) must select the *same* plan as the literal exhaustive
+   enumerator on every input (<= 12 updates, both objectives).
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the hypothesis package")
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.aggregation import aggregate_updates
+from repro.core.network import NetworkState
+from repro.core.ordering import Update
+
+EPS = 1e-9
+
+
+@st.composite
+def aggregation_instance(draw):
+    n = draw(st.integers(1, 12))
+    n_aggs = draw(st.integers(0, 3))
+    server_bw = draw(st.sampled_from([25.0, 50.0, 100.0]))
+    net = NetworkState([], default_bw=100.0)
+    net.add_host("s", server_bw)
+    aggs = [f"a{i}" for i in range(n_aggs)]
+    for a in aggs:
+        net.add_host(a, draw(st.sampled_from([10.0, 50.0, 100.0])))
+    ups = []
+    for i in range(n):
+        net.add_host(f"w{i}", draw(st.sampled_from([10.0, 50.0, 100.0])))
+        ups.append(Update(uid=i, worker=f"w{i}",
+                          size=draw(st.floats(10.0, 500.0)),
+                          version=0, norm=1.0,
+                          t_avail=draw(st.floats(0.0, 2.0))))
+    return net, ups, aggs
+
+
+@settings(max_examples=60, deadline=None)
+@given(aggregation_instance(),
+       st.sampled_from(["makespan", "avg_commit"]),
+       st.sampled_from(["incremental", "exhaustive"]))
+def test_efficiency_constraint_holds(setup, objective, planner):
+    """Members of aggregator group i (beyond the first) must finish
+    aggregating no later than the previous groups' server arrival bound."""
+    net, ups, aggs = setup
+    res = aggregate_updates(ups, net, "s", aggs, objective=objective,
+                            planner=planner)
+    t_bound = 0.0
+    for grp in res.groups:
+        if grp.aggregator is None:
+            if grp.member_transfers:
+                t_bound = grp.member_transfers[-1].t_end
+        else:
+            arrivals = [t.t_end for t in grp.member_transfers]
+            for arr in arrivals[1:]:
+                assert arr <= t_bound + EPS
+            if grp.aggregate_transfer is not None:
+                t_bound = grp.aggregate_transfer.t_end
+
+
+@settings(max_examples=60, deadline=None)
+@given(aggregation_instance(),
+       st.sampled_from(["incremental", "exhaustive"]))
+def test_makespan_never_worse_than_all_direct(setup, planner):
+    net, ups, aggs = setup
+    direct = aggregate_updates(ups, net.copy(), "s", [], planner=planner)
+    agg = aggregate_updates(ups, net.copy(), "s", aggs, planner=planner)
+    assert agg.makespan <= direct.makespan + EPS
+    assert set(agg.commit_times) == {u.uid for u in ups}
+
+
+@settings(max_examples=80, deadline=None)
+@given(aggregation_instance(),
+       st.sampled_from(["makespan", "avg_commit"]))
+def test_incremental_equals_exhaustive(setup, objective):
+    """The incremental planner is an *exact* optimization: identical case
+    selection, grouping, commit times and objective values."""
+    net, ups, aggs = setup
+    old = aggregate_updates(ups, net.copy(), "s", aggs, objective=objective,
+                            planner="exhaustive")
+    new = aggregate_updates(ups, net.copy(), "s", aggs, objective=objective,
+                            planner="incremental")
+    assert new.makespan == pytest.approx(old.makespan, abs=EPS)
+    assert new.avg_commit == pytest.approx(old.avg_commit, abs=EPS)
+    assert new.assignment == old.assignment
+    for uid, t in old.commit_times.items():
+        assert new.commit_times[uid] == pytest.approx(t, abs=EPS)
+    assert [g.aggregator for g in new.groups] == \
+        [g.aggregator for g in old.groups]
+
+
+@settings(max_examples=40, deadline=None)
+@given(aggregation_instance())
+def test_avg_commit_objective_not_worse_than_makespan_plan(setup):
+    """Sanity on objective plumbing: optimizing avg_commit can't produce a
+    worse average than the makespan-optimal plan for the same input."""
+    net, ups, aggs = setup
+    by_avg = aggregate_updates(ups, net.copy(), "s", aggs,
+                               objective="avg_commit")
+    by_mk = aggregate_updates(ups, net.copy(), "s", aggs,
+                              objective="makespan")
+    assert by_avg.avg_commit <= by_mk.avg_commit + EPS

@@ -1,0 +1,78 @@
+"""Golden-trace regression: a seeded ClusterSim run's exact commit sequence.
+
+The simulator is the measurement instrument behind every timing table in
+this repo — a refactor that shifts event ordering, reservation arithmetic or
+scenario semantics by one event would silently invalidate the benchmarks.
+This pins a seeded run (stragglers, N2 bandwidth churn, a dynamic-cluster
+scenario, aggregation, tau_max drops all active) against a checked-in
+trace: worker, version-used, version-committed, aggregated flag, and commit
+time to 3 decimals, one line per commit.
+
+To regenerate after an *intentional* semantics change:
+
+    PYTHONPATH=src python tests/test_golden_trace.py --regen
+
+and include the trace diff in the same commit as the semantics change.
+"""
+
+import os
+import sys
+
+from repro.core.network import gbps, mb
+from repro.core.scenario import (AggregatorFail, Scenario, WorkerJoin,
+                                 WorkerLeave, bandwidth_trace)
+from repro.core.scheduler import SchedulerConfig
+from repro.core.simulator import C2, ClusterSim, N2
+
+GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "golden", "cluster_sim_trace.txt")
+
+
+def golden_run():
+    """The pinned configuration: every simulator feature on one run."""
+    scenario = Scenario(
+        [WorkerLeave(time=2.0, worker="worker5"),
+         AggregatorFail(time=2.5, host="worker0"),
+         WorkerJoin(time=4.0)]
+        + bandwidth_trace("worker2", [(1.0, gbps(1), gbps(1)),
+                                      (3.0, gbps(10), gbps(10))]))
+    cfg = SchedulerConfig(server="server",
+                          aggregators=["worker0", "worker1"],
+                          tau_max=12, mode="async", batch_interval=0.1)
+    # 100 MB updates over a 1.5 Gbps fabric keep aggregation groups in
+    # flight long enough that the AggregatorFail re-routes one (reroutes,
+    # drops, joins and leaves are all pinned non-trivially below)
+    sim = ClusterSim(6, cfg, update_size=mb(100), compute_time=0.05,
+                     straggler=C2, bandwidth=N2, monitor_lag=0.2, seed=42,
+                     default_bw=gbps(1.5), scenario=scenario)
+    return sim.run(until_time=8.0)
+
+
+def render_trace(result) -> str:
+    lines = ["# worker version_used version_committed aggregated time"]
+    for c in result.commits:
+        lines.append(f"{c.worker} {c.version_used} {c.version_committed} "
+                     f"{int(c.aggregated)} {c.time:.3f}")
+    lines.append(f"# drops={result.drops} reroutes={result.reroutes} "
+                 f"joins={result.joins} leaves={result.leaves}")
+    return "\n".join(lines) + "\n"
+
+
+def test_commit_sequence_matches_golden_trace():
+    with open(GOLDEN_PATH) as f:
+        expected = f.read()
+    actual = render_trace(golden_run())
+    assert actual == expected, (
+        "simulator timing semantics changed — if intentional, regenerate "
+        "with `python tests/test_golden_trace.py --regen` and commit the "
+        "trace diff alongside the change")
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+        with open(GOLDEN_PATH, "w") as f:
+            f.write(render_trace(golden_run()))
+        print(f"wrote {GOLDEN_PATH}")
+    else:
+        print(__doc__)

@@ -1,0 +1,301 @@
+"""Tests: dynamic-cluster scenario engine + simulator byte accounting."""
+
+import pytest
+
+from repro.core.baselines import FairShareAsync, SyncSim
+from repro.core.network import NetworkState, gbps, mb
+from repro.core.ordering import Update
+from repro.core.scenario import (AggregatorFail, BandwidthTrace,
+                                 MonitorLagChange, Scenario, WorkerJoin,
+                                 WorkerLeave, bandwidth_trace)
+from repro.core.scheduler import SchedulerConfig
+from repro.core.simulator import (C2, ClusterSim, N2, N_STATIC,
+                                  StragglerModel)
+from repro.scenarios import (aggregator_outage, churn, congestion_wave,
+                             degraded_monitor, flash_crowd,
+                             paper_dynamic_cluster)
+
+
+def ml_cfg(**kw):
+    base = dict(server="server", aggregators=["worker0", "worker1"],
+                tau_max=30, mode="async")
+    base.update(kw)
+    return SchedulerConfig(**base)
+
+
+NO_STRAGGLE = StragglerModel(0, 1)
+
+
+class TestScenarioContainer:
+    def test_events_sorted_stably(self):
+        s = Scenario([WorkerLeave(time=5.0, worker="b"),
+                      WorkerJoin(time=1.0),
+                      WorkerLeave(time=5.0, worker="a")])
+        assert [e.time for e in s] == [1.0, 5.0, 5.0]
+        assert [getattr(e, "worker", None) for e in s][1:] == ["b", "a"]
+
+    def test_rejects_negative_and_infinite_times(self):
+        with pytest.raises(ValueError):
+            Scenario([WorkerJoin(time=-1.0)])
+        with pytest.raises(ValueError):
+            Scenario([WorkerJoin(time=float("inf"))])
+
+    def test_merged_and_filters(self):
+        s = churn(8).merged(degraded_monitor())
+        assert len(s.leaves) == 2 and len(s.joins) == 2
+        assert len(s.of_type(MonitorLagChange)) == 1
+
+    def test_bandwidth_trace_expansion(self):
+        evs = bandwidth_trace("w0", [(1.0, gbps(1), gbps(1)),
+                                     (2.0, gbps(10), gbps(10))])
+        assert all(isinstance(e, BandwidthTrace) and e.host == "w0"
+                   for e in evs)
+        assert [e.time for e in evs] == [1.0, 2.0]
+
+    def test_library_builders_deterministic(self):
+        a = paper_dynamic_cluster(16, seed=3)
+        b = paper_dynamic_cluster(16, seed=3)
+        assert a.events == b.events
+        assert len(flash_crowd(4)) == 4
+        assert len(congestion_wave(["w0", "w1"])) == 4
+
+
+class TestClusterSimScenario:
+    def test_worker_leave_stops_commits_from_it(self):
+        scen = Scenario([WorkerLeave(time=2.0, worker="worker3")])
+        sim = ClusterSim(4, ml_cfg(), update_size=mb(10), compute_time=0.05,
+                         straggler=NO_STRAGGLE, bandwidth=N_STATIC, seed=0,
+                         scenario=scen)
+        res = sim.run(until_time=6.0)
+        assert res.leaves == 1
+        late = [c for c in res.commits if c.worker == "worker3"
+                and c.time > 2.5]
+        assert not late
+        # the other workers keep committing the whole run
+        assert any(c.time > 5.0 for c in res.commits)
+
+    def test_worker_join_starts_committing(self):
+        scen = Scenario([WorkerJoin(time=1.0), WorkerJoin(time=1.0)])
+        sim = ClusterSim(2, ml_cfg(aggregators=[]), update_size=mb(10),
+                         compute_time=0.05, straggler=NO_STRAGGLE,
+                         bandwidth=N_STATIC, seed=0, scenario=scen)
+        res = sim.run(until_time=5.0)
+        assert res.joins == 2
+        joined = {c.worker for c in res.commits} - {"worker0", "worker1"}
+        assert len(joined) == 2  # both new hosts commit real updates
+
+    def test_leave_then_rejoin_same_name(self):
+        scen = Scenario([WorkerLeave(time=1.0, worker="worker1"),
+                         WorkerJoin(time=3.0, worker="worker1")])
+        sim = ClusterSim(2, ml_cfg(aggregators=[]), update_size=mb(10),
+                         compute_time=0.05, straggler=NO_STRAGGLE,
+                         bandwidth=N_STATIC, seed=0, scenario=scen)
+        res = sim.run(until_time=6.0)
+        gap = [c for c in res.commits if c.worker == "worker1"
+               and 1.5 < c.time < 3.0]
+        back = [c for c in res.commits if c.worker == "worker1"
+                and c.time > 3.5]
+        assert not gap and back
+
+    def test_aggregator_fail_reroutes_inflight(self):
+        """Slow fabric keeps aggregation groups in flight at fail time; the
+        surviving members must re-plan (not hang, not commit via the dead
+        aggregator)."""
+        scen = Scenario([AggregatorFail(time=1.0, host="worker0"),
+                         AggregatorFail(time=1.0, host="worker1")])
+        sim = ClusterSim(8, ml_cfg(tau_max=None), update_size=mb(400),
+                         compute_time=0.02, straggler=NO_STRAGGLE,
+                         bandwidth=N_STATIC, default_bw=gbps(1), seed=3,
+                         scenario=scen)
+        res = sim.run(until_time=20.0)
+        assert res.reroutes > 0
+        assert not sim.aggregators  # roster empty after both failures
+        # every commit after the failure is direct (nothing via dead hosts)
+        assert all(not c.aggregated for c in res.commits if c.time > 5.0)
+        # re-routed updates eventually commit (exactly-once: uids unique)
+        uids = [c.uid for c in res.commits]
+        assert len(uids) == len(set(uids))
+
+    def test_caller_config_never_mutated(self):
+        """The sim owns a private config copy: topology events must not
+        leak into (or be detached by) other sims sharing the object."""
+        cfg = ml_cfg()
+        scen = Scenario([AggregatorFail(time=0.5, host="worker0"),
+                         WorkerLeave(time=1.0, worker="worker1")])
+        sim = ClusterSim(4, cfg, update_size=mb(10), compute_time=0.05,
+                         straggler=NO_STRAGGLE, seed=0, scenario=scen)
+        sim.run(until_time=2.0)
+        assert not sim.aggregators
+        assert list(cfg.aggregators) == ["worker0", "worker1"]
+
+    def test_duplicate_join_is_noop(self):
+        """Joining an already-alive host must not fork a second compute
+        loop (which would silently double that worker's commit rate)."""
+        kw = dict(update_size=mb(10), compute_time=0.05,
+                  straggler=NO_STRAGGLE, bandwidth=N_STATIC, seed=0)
+        base = ClusterSim(2, ml_cfg(aggregators=[]), **kw).run(until_time=4.0)
+        scen = Scenario([WorkerJoin(time=1.0, worker="worker0")])
+        dup = ClusterSim(2, ml_cfg(aggregators=[]), scenario=scen,
+                         **kw).run(until_time=4.0)
+        n_base = sum(1 for c in base.commits if c.worker == "worker0")
+        n_dup = sum(1 for c in dup.commits if c.worker == "worker0")
+        assert n_dup == n_base and dup.joins == 0
+
+    def test_join_refills_failed_aggregator_slot(self):
+        scen = Scenario([AggregatorFail(time=0.5, host="worker0"),
+                         WorkerJoin(time=1.0)])
+        sim = ClusterSim(4, ml_cfg(), update_size=mb(10), compute_time=0.05,
+                         straggler=NO_STRAGGLE, seed=0, scenario=scen)
+        sim.run(until_time=3.0)
+        assert len(sim.aggregators) == 2
+        assert "worker4" in sim.aggregators  # the joiner took the slot
+        assert "worker0" not in sim.aggregators
+
+    def test_aggregator_fail_host_keeps_computing(self):
+        scen = Scenario([AggregatorFail(time=0.5, host="worker0")])
+        sim = ClusterSim(4, ml_cfg(), update_size=mb(10), compute_time=0.05,
+                         straggler=NO_STRAGGLE, bandwidth=N_STATIC, seed=0,
+                         scenario=scen)
+        res = sim.run(until_time=4.0)
+        assert any(c.worker == "worker0" and c.time > 1.0
+                   for c in res.commits)
+
+    def test_bandwidth_trace_slows_commits(self):
+        kw = dict(update_size=mb(50), compute_time=0.05,
+                  straggler=NO_STRAGGLE, bandwidth=N_STATIC, seed=0)
+        base = ClusterSim(4, ml_cfg(aggregators=[]), **kw).run(until_time=6.0)
+        scen = Scenario(bandwidth_trace("worker2", [(1.0, gbps(0.1),
+                                                     gbps(0.1))]))
+        slow = ClusterSim(4, ml_cfg(aggregators=[]), scenario=scen,
+                          **kw).run(until_time=6.0)
+        n_base = sum(1 for c in base.commits if c.worker == "worker2")
+        n_slow = sum(1 for c in slow.commits if c.worker == "worker2")
+        assert n_slow < n_base
+
+    def test_monitor_lag_change_applies(self):
+        scen = Scenario([MonitorLagChange(time=1.0, lag=3.0)])
+        sim = ClusterSim(4, ml_cfg(), update_size=mb(10), compute_time=0.05,
+                         scenario=scen, seed=0)
+        sim.run(until_time=2.0)
+        assert sim.monitor_lag == 3.0
+
+    def test_training_mode_survives_churn(self):
+        """on_compute/on_commit/on_drop stay consistent under churn: every
+        computed update is committed or dropped exactly once."""
+        seen = {"computed": 0, "committed": 0, "dropped": 0}
+
+        def on_compute(worker, version):
+            seen["computed"] += 1
+            return mb(10), 1.0
+
+        scen = churn(6, leave_at=1.0, rejoin_at=2.0, fraction=0.34)
+        sim = ClusterSim(6, ml_cfg(), update_size=mb(10), compute_time=0.05,
+                         straggler=NO_STRAGGLE, bandwidth=N_STATIC, seed=1,
+                         scenario=scen, on_compute=on_compute,
+                         on_commit=lambda rec: seen.__setitem__(
+                             "committed", seen["committed"] + 1),
+                         on_drop=lambda w, v: seen.__setitem__(
+                             "dropped", seen["dropped"] + 1))
+        res = sim.run(until_time=4.0)
+        assert res.joins == 2 and res.leaves == 2
+        assert seen["committed"] == res.n_commits
+        # conservation: nothing lost silently, nothing double-counted
+        # (_uid_meta holds every computed-but-unresolved update: pending,
+        # planned, and in flight)
+        assert seen["computed"] == seen["committed"] + seen["dropped"] \
+            + len(sim._uid_meta)
+
+
+class TestBaselineScenarios:
+    def test_fairshare_churn_applies(self):
+        scen = churn(8, leave_at=2.0, rejoin_at=4.0)
+        van = FairShareAsync(8, update_size=mb(50), compute_time=0.05,
+                             straggler=NO_STRAGGLE, seed=0,
+                             scenario=scen).run(until_time=8.0)
+        assert van.joins == 2 and van.leaves == 2
+        assert not any(c.worker == "worker7" and 2.5 < c.time < 4.0
+                       for c in van.commits)
+
+    def test_fairshare_leave_kills_inflight_flow(self):
+        scen = Scenario([WorkerLeave(time=0.2, worker="worker0")])
+        van = FairShareAsync(2, update_size=mb(1000), compute_time=0.05,
+                             straggler=NO_STRAGGLE, seed=0,
+                             scenario=scen).run(until_time=3.0)
+        assert van.scenario_drops == 1
+        assert not any(c.worker == "worker0" for c in van.commits)
+
+    def test_syncsim_membership_changes_iteration_time(self):
+        kw = dict(update_size=mb(100), compute_time=0.1,
+                  straggler=NO_STRAGGLE)
+        full = SyncSim(16, seed=0, **kw).run(20)
+        scen = churn(16, leave_at=0.0, rejoin_at=1e9, fraction=0.5)
+        small = SyncSim(16, seed=0, scenario=scen, **kw).run(20)
+        # ring time 2(N-1)/N * size/bw shrinks with fewer workers
+        assert small.mean_iteration < full.mean_iteration
+
+    def test_syncsim_leave_removes_that_workers_nic_slot(self):
+        """A slow joiner then an unrelated leave: the slow NIC must still
+        be in the ring (the leave removes the leaver's slot, not the
+        last-appended one)."""
+        kw = dict(update_size=mb(100), compute_time=0.1,
+                  straggler=NO_STRAGGLE)
+        scen = Scenario([WorkerJoin(time=0.0, worker="slow", up=gbps(1)),
+                         WorkerLeave(time=0.5, worker="worker0")])
+        churned = SyncSim(4, seed=0, scenario=scen, **kw).run(4)
+        # 5 then 4 workers with the 1 Gbps NIC retained: the ring is paced
+        # by the slow link -> much slower than the all-10G baseline
+        base = SyncSim(4, seed=0, **kw).run(4)
+        assert churned.iteration_times[-1] > base.iteration_times[-1] * 4
+
+
+class TestByteAccounting:
+    """Pins ``ClusterSim._enact``'s accounting against ``AggregationResult``:
+    the server is charged each direct update once plus ONE max-member-size
+    aggregate per group (summed gradients keep tensor size, §3.2);
+    member->aggregator hops appear only in ``bytes_in_network``."""
+
+    def _run_and_expect(self, aggregators):
+        cfg = ml_cfg(aggregators=aggregators, batch_interval=0.2)
+        sim = ClusterSim(8, cfg, update_size=mb(40), compute_time=0.02,
+                         straggler=NO_STRAGGLE, bandwidth=N_STATIC, seed=5)
+        expected = {"server": 0.0, "network": 0.0}
+        orig = sim.scheduler.schedule_batch
+
+        def wrapped(updates, network, **kw):
+            plan = orig(updates, network, **kw)
+            for grp in plan.aggregation.groups:
+                if grp.aggregator is None:
+                    for m in grp.members:
+                        expected["server"] += m.size
+                        expected["network"] += m.size
+                elif grp.members:
+                    agg_size = max(m.size for m in grp.members)
+                    expected["server"] += agg_size
+                    expected["network"] += agg_size \
+                        + sum(m.size for m in grp.members)
+            return plan
+
+        sim.scheduler.schedule_batch = wrapped
+        res = sim.run(until_time=4.0)
+        return res, expected
+
+    def test_matches_aggregation_result_with_aggregators(self):
+        res, expected = self._run_and_expect(["worker0", "worker1"])
+        assert res.bytes_to_server == pytest.approx(expected["server"])
+        assert res.bytes_in_network == pytest.approx(expected["network"])
+        # aggregation ran and strictly reduced server-side bytes
+        assert any(c.aggregated for c in res.commits)
+        assert res.bytes_to_server < res.bytes_in_network
+
+    def test_direct_only_network_equals_server(self):
+        res, expected = self._run_and_expect([])
+        assert res.bytes_to_server == pytest.approx(expected["server"])
+        assert res.bytes_in_network == pytest.approx(res.bytes_to_server)
+
+    def test_server_bytes_bounded_by_commits(self):
+        """With equal-size updates the server never pays more than one
+        update_size per commit (and strictly less when groups formed)."""
+        res, _ = self._run_and_expect(["worker0", "worker1"])
+        # bytes for not-yet-committed in-flight updates are also counted,
+        # so allow up to one extra update per worker (the in-flight cap)
+        assert res.bytes_to_server <= (res.n_commits + 8) * mb(40) + 1e-6
