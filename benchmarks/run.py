@@ -280,6 +280,135 @@ def bench_roofline_summary():
            f";slowest={worst['arch']}/{worst['shape']}")
 
 
+def bench_fused_dequant_aggregate(out: dict):
+    """PR3 tentpole: the fused dequantize+aggregate+norm kernel vs the
+    unfused composition (vmap dequantize -> grad_aggregate), plus the
+    modeled aggregator HBM traffic from ``benchmarks/roofline.py``.
+
+    Wall-clock here is interpret-mode-on-CPU (the container has no TPU) —
+    it validates the code path and records relative numbers; the roofline
+    bytes are the hardware-independent claim (>= 1.5x is the PR3
+    acceptance bar; the model gives ~6x at N=8)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels.ops import (dequant_aggregate_op, dequantize_op,
+                                   grad_aggregate_op, quantize_op)
+    try:
+        from benchmarks.roofline import aggregator_hbm_traffic
+    except ImportError:           # `python benchmarks/run.py` direct run
+        from roofline import aggregator_hbm_traffic
+
+    n, d = 8, 16384
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    qs, ss = zip(*(quantize_op(x[i]) for i in range(n)))
+    q, s = jnp.stack(qs), jnp.stack(ss)
+    w = jnp.ones((n,), jnp.float32)
+
+    def fused():
+        return dequant_aggregate_op(q, s, w, orig_len=d)
+
+    def unfused():
+        deq = jax.vmap(lambda qq, sc: dequantize_op(qq, sc, orig_len=d)
+                       )(q, s)
+        return grad_aggregate_op(deq, w)
+
+    t0 = time.perf_counter()
+    agg_f, ssq_f = fused()
+    jax.block_until_ready(agg_f)
+    fused_first = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    agg_u, ssq_u = unfused()
+    jax.block_until_ready(agg_u)
+    unfused_first = time.perf_counter() - t0
+    best = {"fused": fused_first, "unfused": unfused_first}
+    for name, fn in (("fused", fused), ("unfused", unfused)):
+        for _ in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn()[0])
+            best[name] = min(best[name], time.perf_counter() - t0)
+    err = float(jnp.max(jnp.abs(agg_f - agg_u)))
+    traffic = aggregator_hbm_traffic(n, d)
+    out["wallclock"] = {"n": n, "d": d,
+                        "fused_us": best["fused"] * 1e6,
+                        "unfused_us": best["unfused"] * 1e6,
+                        "max_abs_err": err}
+    out["roofline"] = {"n": n, "d": d, **traffic}
+    record("fused_dequant_aggregate", best["fused"] + best["unfused"],
+           f"hbm_ratio={traffic['ratio']:.2f}x;"
+           f"fused={best['fused']*1e6:.0f}us;"
+           f"unfused={best['unfused']*1e6:.0f}us;max_err={err:.1e}")
+
+
+def bench_flat_bucket_pack(out: dict):
+    """PR3: flat-bucket pack (one fused scatter + zero-copy slices) vs the
+    old per-bucket concat/per-leaf split, on a transformer-ish pytree.
+
+    Caveat recorded with the number: on CPU the two paths copy the same
+    bytes and XLA fuses both, so this wall-clock is noise-dominated and
+    roughly a tie.  The flat layout's claim is *structural* — one
+    contiguous array per bucket is what lets a bucket be a single
+    transfer unit (psum operand, barrier link, quantize payload) in the
+    compiled graph; the measured wins live in the fused-kernel bench and
+    the roofline model, not here."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.dist.flatbuf import (bucket_slice, pack_leaves,
+                                    plan_flat_layout, unpack_bucket)
+
+    rng = np.random.default_rng(0)
+    sizes = [64 * 1024, 256, 64 * 1024, 256, 16 * 1024, 1024,
+             64 * 1024, 256, 4 * 1024] * 4
+    leaves = [jnp.asarray(rng.normal(size=(sz,)), jnp.float32)
+              for sz in sizes]
+    layout = plan_flat_layout(sizes, 256 * 1024)
+
+    @jax.jit
+    def flat_path(ls):
+        flat = pack_leaves(ls)
+        outs = []
+        for k in range(len(layout.buckets)):
+            vec = bucket_slice(flat, layout, k)
+            outs.extend(l for _, l in unpack_bucket(vec, layout, k, ls))
+        return outs
+
+    @jax.jit
+    def perleaf_path(ls):
+        outs = []
+        for b in layout.buckets:
+            vec = jnp.concatenate([ls[i].ravel() for i in b.indices])
+            off = 0
+            for i in b.indices:
+                outs.append(vec[off:off + ls[i].size])
+                off += ls[i].size
+        return outs
+
+    best = {}
+    for name, fn in (("flat", flat_path), ("perleaf", perleaf_path)):
+        jax.block_until_ready(fn(leaves))          # compile
+        t = float("inf")
+        for _ in range(5):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(leaves))
+            t = min(t, time.perf_counter() - t0)
+        best[name] = t
+    out["flat_pack"] = {"buckets": len(layout.buckets),
+                        "flat_us": best["flat"] * 1e6,
+                        "perleaf_us": best["perleaf"] * 1e6,
+                        "note": "CPU wall-clock is noise-dominated (same "
+                                "bytes copied, both fused by XLA); the "
+                                "flat layout's win is structural — see "
+                                "roofline/wallclock for the measured "
+                                "data-plane gains"}
+    record("flat_bucket_pack", best["flat"] + best["perleaf"],
+           f"flat={best['flat']*1e6:.0f}us;"
+           f"perleaf={best['perleaf']*1e6:.0f}us;"
+           f"buckets={len(layout.buckets)} (cpu noise-dominated; "
+           f"structural win, see roofline)")
+
+
 def bench_kernel_flash_attention():
     """Pallas flash-attention kernel vs jnp oracle (interpret mode)."""
     import jax
@@ -299,8 +428,32 @@ def bench_kernel_flash_attention():
     record("kernel_flash_attention", dt, f"max_err={err:.2e}")
 
 
-def main() -> None:
+def write_bench_pr3(out: dict, path: str = "BENCH_PR3.json") -> None:
+    """Record the PR3 data-plane numbers (roofline bytes + wall-clock for
+    the old vs fused aggregator path) — CI's smoke job regenerates this."""
+    import json
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    print(f"wrote {path}", flush=True)
+
+
+def main(argv=None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="data-plane benches only (CI smoke); writes "
+                         "BENCH_PR3.json and skips the slow simulator grid")
+    args = ap.parse_args(argv)
+
     print("name,us_per_call,derived")
+    pr3: dict = {}
+    if args.fast:
+        bench_fig2_aggregation()
+        bench_fused_dequant_aggregate(pr3)
+        bench_flat_bucket_pack(pr3)
+        bench_kernel_flash_attention()
+        write_bench_pr3(pr3)
+        return
     bench_fig2_aggregation()
     bench_table2_speedup_grid()
     bench_fig7_delay_convergence()
@@ -311,6 +464,9 @@ def main() -> None:
     bench_sec74_scheduler_scaling()
     bench_roofline_summary()
     bench_kernel_flash_attention()
+    bench_fused_dequant_aggregate(pr3)
+    bench_flat_bucket_pack(pr3)
+    write_bench_pr3(pr3)
 
 
 if __name__ == "__main__":

@@ -20,6 +20,7 @@ from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
 
 INF = math.inf
 _EPS = 1e-9
+_REL_EPS = 1e-9     # relative rate tolerance for segment coalescing
 
 
 class Timeline:
@@ -148,13 +149,37 @@ class Timeline:
             self.add(t0, t1, r)
 
     def _coalesce(self) -> None:
-        """Merge adjacent segments with (numerically) equal rates."""
+        """Merge adjacent segments with (numerically) equal rates.
+
+        Equality is *relative*: reservation/release round-trips leave the
+        restored rate off by float rounding (~1e-7 absolute at 10 Gbps),
+        far above any absolute epsilon small enough to separate real
+        rates.  Without the relative test, long churn scenarios grow the
+        segment list without bound — every later ``bisect`` and segment
+        walk degrades linearly with the garbage (PR3 perf fix; bounded
+        growth is pinned by ``tests/test_network.py``).
+        """
         nt, nr = [self.times[0]], [self.rates[0]]
         for t, r in zip(self.times[1:], self.rates[1:]):
-            if abs(r - nr[-1]) > _EPS:
+            if abs(r - nr[-1]) > _EPS + _REL_EPS * max(abs(r), abs(nr[-1])):
                 nt.append(t)
                 nr.append(r)
         self.times, self.rates = nt, nr
+
+    def forget_before(self, t: float) -> None:
+        """Drop breakpoints strictly before ``t`` (the rate at ``t``
+        extends back to 0).
+
+        Once simulation time passes ``t``, no query ever looks left of it;
+        the dead breakpoints only slow down ``bisect``.  Releases of
+        transfers that started before ``t`` still work: their past chunks
+        land in the (never again queried) merged head segment.
+        """
+        i = self._idx(t)
+        if i > 0:
+            self.times = [0.0] + self.times[i + 1:]
+            self.rates = self.rates[i:]
+            self._coalesce()
 
     # ------------------------------------------------------------------ #
     # combination
@@ -327,6 +352,20 @@ class NetworkState:
         """Undo a reservation (used by replication's lead-reduction, §5.3)."""
         for link in self.path(transfer.src, transfer.dst):
             link.add_profile(transfer.profile)
+
+    def compact(self, t_now: float) -> None:
+        """Forget timeline history before ``t_now`` on every link.
+
+        Long dynamic-cluster runs otherwise accumulate one breakpoint per
+        past NIC-rate change / reservation remnant forever, degrading
+        every ``bisect``-backed query.  Call only with a monotonically
+        advancing simulation clock — queries at ``t < t_now`` become
+        meaningless afterwards.
+        """
+        for tl in self.up.values():
+            tl.forget_before(t_now)
+        for tl in self.down.values():
+            tl.forget_before(t_now)
 
 
 # --------------------------------------------------------------------------- #

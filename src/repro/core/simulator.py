@@ -416,6 +416,11 @@ class ClusterSim:
 
     def _on_batch(self, t: float) -> None:
         self._push_event(t + self.cfg.batch_interval, "batch")
+        # every planner/enact query clamps to max(t_avail, t_now), so
+        # history left of the batch clock is dead weight — compact it or
+        # long churn scenarios grow every Timeline without bound
+        self.net_actual.compact(t)
+        self.net_lagged.compact(t)
         if not self._pending:
             return
         batch, self._pending = self._pending, []

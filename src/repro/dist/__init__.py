@@ -7,20 +7,25 @@ Bridges the ``core/`` control plane (ordering, aggregation, replication
 * ``sharding``    — partition policy: params / inputs / caches / activations
 * ``policy``      — the ``sharding_policy`` context + ``constrain`` hook
   the model forward passes call
-* ``collectives`` — ``mlfabric_grad_reduce``: bucketed, shortest-first,
-  hierarchical (optionally int8 cross-pod) gradient reduction in-graph
+* ``flatbuf``     — flat-bucket layout: one buffer per gradient,
+  zero-copy bucket/leaf views, the int8 flat wire round-trip
+* ``collectives`` — ``mlfabric_grad_reduce``: flat-bucketed,
+  shortest-first, hierarchical (optionally int8 cross-pod with the fused
+  aggregator kernel) gradient reduction in-graph
 * ``elastic``     — mesh rebuild + replica restore on device loss
 """
 
-from . import collectives, compat, elastic, policy, sharding
+from . import collectives, compat, elastic, flatbuf, policy, sharding
 from .collectives import mlfabric_grad_reduce, plan_buckets
+from .flatbuf import FlatLayout, pack_leaves, plan_flat_layout
 from .compat import AxisType, make_mesh, shard_map
 from .elastic import ElasticSession, surviving_mesh
 from .policy import constrain, sharding_policy
 
 __all__ = [
-    "collectives", "compat", "elastic", "policy", "sharding",
+    "collectives", "compat", "elastic", "flatbuf", "policy", "sharding",
     "mlfabric_grad_reduce", "plan_buckets",
+    "FlatLayout", "pack_leaves", "plan_flat_layout",
     "AxisType", "make_mesh", "shard_map",
     "ElasticSession", "surviving_mesh",
     "constrain", "sharding_policy",

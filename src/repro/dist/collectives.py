@@ -4,10 +4,12 @@
 with the schedule the paper's control plane (``core/ordering.py``,
 ``core/aggregation.py``) plans:
 
-* **Bucketing** — gradient leaves are packed into ~``bucket_bytes``
-  transfer units, the granularity MLfabric schedules (paper §4: updates
-  are the unit of transfer; framework gradients are bucketed exactly so
-  the network sees schedulable-size messages).
+* **Flat buckets** (``dist/flatbuf.py``) — the whole gradient is scattered
+  once into a single flat f32 buffer; every planned bucket is then a
+  contiguous zero-copy slice of it, so a bucket is one transfer unit in
+  the compiled graph exactly as it is one unit in the control plane's
+  schedule (paper §4: updates are the unit of transfer).  No per-leaf
+  concat/split temporaries survive on the hot path.
 * **Shortest-job-first issue order** (Alg. 2, §5.1.1) — buckets are
   reduced smallest-first, and consecutive reductions are chained through
   ``optimization_barrier`` so XLA cannot reorder them: short transfers
@@ -15,63 +17,39 @@ with the schedule the paper's control plane (``core/ordering.py``,
 * **Hierarchical aggregation** (§5.2) — an intra-pod ``psum`` feeds an
   optional inter-pod stage that mirrors the paper's aggregator hosts:
   every pod ships its partial aggregate (optionally int8-compressed via
-  ``kernels/quantize.py``) and each host runs the fused aggregator
-  compute from ``kernels/grad_aggregate.py`` over the gathered updates.
+  ``kernels/quantize.py``) and each host runs the aggregator compute.
+  With compression that receive path is the fused
+  ``kernels/dequant_aggregate.py`` kernel: dequantize -> weighted sum ->
+  norm in one VMEM-resident pass instead of N dequantized f32 HBM
+  round-trips.
 
-The function must be called inside a ``shard_map`` body where
+The staged API (``plan_reduce`` + ``reduce_flat_buckets``) lets
+``launch/steps.py`` overlap communication with a chunked backward: each
+chunk's bucket reductions are issued as soon as that chunk's gradients
+exist, while the next chunk's backprop runs.
+
+The functions must be called inside a ``shard_map`` body where
 ``intra_axis`` (and ``inter_axis``, when given) are manual mesh axes —
 see ``launch/steps.py:build_mlfabric_train_step``.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..kernels import dequantize_op, grad_aggregate_op, quantize_op
+from ..kernels import dequant_aggregate_op, grad_aggregate_op, quantize_op
+# Re-exported for backwards compatibility: the bucket planner grew into the
+# flat-layout planner and moved to flatbuf.py.
+from .flatbuf import (Bucket, FlatLayout, bucket_slice, pack_leaves,
+                      plan_buckets, plan_flat_layout, unpack_bucket)
 
 Params = Any
 
-
-# --------------------------------------------------------------------------- #
-# bucket planning (pure; unit-tested without devices)
-# --------------------------------------------------------------------------- #
-@dataclass(frozen=True)
-class Bucket:
-    """One transfer unit: which flat-leaf indices it carries and its size."""
-
-    indices: Tuple[int, ...]
-    nbytes: int
-
-
-def plan_buckets(leaf_nbytes: Sequence[int], bucket_bytes: int, *,
-                 shortest_first: bool = True) -> List[Bucket]:
-    """Greedy-pack leaves (in tree order) into <= ``bucket_bytes`` buckets.
-
-    A leaf larger than ``bucket_bytes`` becomes its own bucket — MLfabric
-    never splits an update, it orders whole transfers.  With
-    ``shortest_first`` the buckets are issued smallest-first (Alg. 2's
-    SJF rule); ties keep tree order so the plan is deterministic.
-    """
-    if bucket_bytes <= 0:
-        raise ValueError(f"bucket_bytes must be positive: {bucket_bytes}")
-    buckets: List[Bucket] = []
-    cur: List[int] = []
-    cur_bytes = 0
-    for i, nbytes in enumerate(leaf_nbytes):
-        if cur and cur_bytes + nbytes > bucket_bytes:
-            buckets.append(Bucket(tuple(cur), cur_bytes))
-            cur, cur_bytes = [], 0
-        cur.append(i)
-        cur_bytes += nbytes
-    if cur:
-        buckets.append(Bucket(tuple(cur), cur_bytes))
-    if shortest_first:
-        buckets.sort(key=lambda b: (b.nbytes, b.indices))
-    return buckets
+__all__ = ["Bucket", "plan_buckets", "mlfabric_grad_reduce",
+           "plan_reduce", "reduce_flat_buckets", "unpack_reduced"]
 
 
 # --------------------------------------------------------------------------- #
@@ -80,25 +58,81 @@ def plan_buckets(leaf_nbytes: Sequence[int], bucket_bytes: int, *,
 def _inter_pod_aggregate(vec: jax.Array, inter_axis: str, *,
                          compress: bool) -> jax.Array:
     """Cross-pod stage: gather every pod's partial aggregate and run the
-    aggregator's fused (sum + norm) compute from ``kernels/``.
+    aggregator's fused compute from ``kernels/``.
 
     With ``compress`` the wire payload is the int8 blocks + f32 scales
-    (the §8-complementary gradient compression); dequantization happens
-    at the aggregator, exactly like a receiving aggregator host would.
+    (the §8-complementary gradient compression); the receiving aggregator
+    host runs ONE fused dequantize+aggregate+norm pass over the stacked
+    payloads — never materializing per-pod f32 copies in HBM.
     """
     if compress:
         d = vec.shape[0]
         q, s = quantize_op(vec)                      # pads internally
         qs = jax.lax.all_gather(q, inter_axis)       # [P, D_pad] int8 wire
         ss = jax.lax.all_gather(s, inter_axis)       # [P, D_pad/block] f32
-        gathered = jax.vmap(
-            lambda qq, sc: dequantize_op(qq, sc, orig_len=d))(qs, ss)
-    else:
-        gathered = jax.lax.all_gather(vec, inter_axis)   # [P, D] f32 wire
+        n_pods = qs.shape[0]
+        agg, _ = dequant_aggregate_op(
+            qs, ss, jnp.ones((n_pods,), jnp.float32), orig_len=d)
+        return agg
+    gathered = jax.lax.all_gather(vec, inter_axis)   # [P, D] f32 wire
     n_pods = gathered.shape[0]
-    weights = jnp.ones((n_pods,), jnp.float32)
-    agg, _ = grad_aggregate_op(gathered, weights)
+    agg, _ = grad_aggregate_op(gathered, jnp.ones((n_pods,), jnp.float32))
     return agg
+
+
+# --------------------------------------------------------------------------- #
+# staged flat-bucket reduction
+# --------------------------------------------------------------------------- #
+def plan_reduce(tree: Params, *, bucket_bytes: int,
+                shortest_first: bool = True) -> FlatLayout:
+    """Plan the flat-bucket layout for a gradient pytree (f32 transfer)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return plan_flat_layout([l.size for l in leaves], bucket_bytes,
+                            elem_bytes=4, shortest_first=shortest_first)
+
+
+def reduce_flat_buckets(grads: Params, layout: FlatLayout, *,
+                        intra_axis: str, inter_axis: Optional[str],
+                        compress_inter: bool, mean_over: int,
+                        token: Optional[jax.Array] = None
+                        ) -> Tuple[List[jax.Array], jax.Array]:
+    """Pack ``grads`` flat and reduce every bucket in issue order.
+
+    Returns the reduced bucket vectors (in ``layout.buckets`` order) and
+    the chain token.  Threading ``token`` across calls extends the SJF
+    barrier chain over multiple gradient chunks, which is how the chunked
+    backward keeps all its collectives in one planned issue order.
+    """
+    leaves = jax.tree_util.tree_leaves(grads)
+    flat = pack_leaves(leaves)                       # single fused scatter
+    if token is None:
+        token = jnp.zeros((), jnp.float32)
+    reduced: List[jax.Array] = []
+    for k in range(len(layout.buckets)):
+        vec = bucket_slice(flat, layout, k)          # zero-copy view
+        # Chain each bucket on the previous one's result: the compiler
+        # must issue the collectives in the planned (SJF) order.
+        vec, token = jax.lax.optimization_barrier((vec, token))
+        vec = jax.lax.psum(vec, intra_axis)          # intra-pod reduce
+        if inter_axis is not None:
+            vec = _inter_pod_aggregate(vec, inter_axis,
+                                       compress=compress_inter)
+        vec = vec / mean_over
+        token = vec[0] * 0.0
+        reduced.append(vec)
+    return reduced, token
+
+
+def unpack_reduced(reduced: List[jax.Array], layout: FlatLayout,
+                   tree: Params) -> Params:
+    """Carve the reduced bucket vectors back into ``tree``'s structure
+    (zero-copy sub-slices of each bucket)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out: List[Optional[jax.Array]] = [None] * len(leaves)
+    for k, vec in enumerate(reduced):
+        for i, leaf in unpack_bucket(vec, layout, k, leaves):
+            out[i] = leaf
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def mlfabric_grad_reduce(grads: Params, *, intra_axis: str = "data",
@@ -111,32 +145,13 @@ def mlfabric_grad_reduce(grads: Params, *, intra_axis: str = "data",
 
     Numerically equivalent (to f32 reduction tolerance; int8 tolerance
     with ``compress_inter``) to ``psum(grads) / mean_over`` over the
-    batch axes, but executed as an explicit bucket schedule.
+    batch axes, but executed as an explicit flat-bucket schedule.
     """
-    leaves, treedef = jax.tree_util.tree_flatten(grads)
-    if not leaves:
+    if not jax.tree_util.tree_leaves(grads):
         return grads
-    nbytes = [leaf.size * 4 for leaf in leaves]      # reduced in f32
-    buckets = plan_buckets(nbytes, bucket_bytes, shortest_first=shortest_first)
-
-    out: List[Optional[jax.Array]] = [None] * len(leaves)
-    token = jnp.zeros((), jnp.float32)
-    for bucket in buckets:
-        vec = jnp.concatenate(
-            [leaves[i].astype(jnp.float32).ravel() for i in bucket.indices])
-        # Chain each bucket on the previous one's result: the compiler
-        # must issue the collectives in the planned (SJF) order.
-        vec, token = jax.lax.optimization_barrier((vec, token))
-        vec = jax.lax.psum(vec, intra_axis)          # intra-pod reduce
-        if inter_axis is not None:
-            vec = _inter_pod_aggregate(vec, inter_axis,
-                                       compress=compress_inter)
-        vec = vec / mean_over
-        token = vec[0] * 0.0
-        offset = 0
-        for i in bucket.indices:
-            leaf = leaves[i]
-            out[i] = vec[offset:offset + leaf.size].reshape(
-                leaf.shape).astype(leaf.dtype)
-            offset += leaf.size
-    return jax.tree_util.tree_unflatten(treedef, out)
+    layout = plan_reduce(grads, bucket_bytes=bucket_bytes,
+                         shortest_first=shortest_first)
+    reduced, _ = reduce_flat_buckets(
+        grads, layout, intra_axis=intra_axis, inter_axis=inter_axis,
+        compress_inter=compress_inter, mean_over=mean_over)
+    return unpack_reduced(reduced, layout, grads)

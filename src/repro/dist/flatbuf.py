@@ -1,0 +1,194 @@
+"""Flat-bucket layout: one contiguous buffer per gradient, one slice per
+transfer unit.
+
+The control plane schedules whole *buckets* (paper §4: updates are the unit
+of transfer); the data plane should therefore move buckets as single
+contiguous arrays, not per-leaf fragments.  This module plans the layout
+once (pure Python, unit-tested without devices) and provides the two data
+movements the hot path needs:
+
+* ``pack_leaves`` — a single fused scatter of every raveled-f32 leaf into
+  one flat buffer (XLA lowers the concatenate to one kernel that writes
+  each operand at its offset; no per-leaf intermediates survive fusion).
+* bucket views — because ``plan_buckets`` packs leaves in tree order, every
+  bucket occupies one contiguous ``[start, start+size)`` range of the flat
+  buffer, so carving a bucket out is a zero-copy slice, and leaves are
+  zero-copy sub-slices of the reduced bucket.
+
+The layout invariants (bucket ranges tile ``[0, total)`` with no gap or
+overlap; leaf spans tile each bucket) are property-tested in
+``tests/test_flatbuf.py``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+# --------------------------------------------------------------------------- #
+# bucket planning (pure; unit-tested without devices)
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class Bucket:
+    """One transfer unit: which flat-leaf indices it carries and its size."""
+
+    indices: Tuple[int, ...]
+    nbytes: int
+
+
+def plan_buckets(leaf_nbytes: Sequence[int], bucket_bytes: int, *,
+                 shortest_first: bool = True) -> List[Bucket]:
+    """Greedy-pack leaves (in tree order) into <= ``bucket_bytes`` buckets.
+
+    A leaf larger than ``bucket_bytes`` becomes its own bucket — MLfabric
+    never splits an update, it orders whole transfers.  With
+    ``shortest_first`` the buckets are issued smallest-first (Alg. 2's
+    SJF rule); ties keep tree order so the plan is deterministic.
+    """
+    if bucket_bytes <= 0:
+        raise ValueError(f"bucket_bytes must be positive: {bucket_bytes}")
+    buckets: List[Bucket] = []
+    cur: List[int] = []
+    cur_bytes = 0
+    for i, nbytes in enumerate(leaf_nbytes):
+        if cur and cur_bytes + nbytes > bucket_bytes:
+            buckets.append(Bucket(tuple(cur), cur_bytes))
+            cur, cur_bytes = [], 0
+        cur.append(i)
+        cur_bytes += nbytes
+    if cur:
+        buckets.append(Bucket(tuple(cur), cur_bytes))
+    if shortest_first:
+        buckets.sort(key=lambda b: (b.nbytes, b.indices))
+    return buckets
+
+
+# --------------------------------------------------------------------------- #
+# flat layout
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class FlatLayout:
+    """Where every leaf and bucket lives inside the flat buffer.
+
+    All offsets/sizes are in *elements* of the packed dtype.  Buckets are in
+    issue (SJF) order; leaf offsets are in tree order, so a bucket's range is
+    ``[leaf_offsets[b.indices[0]], ...last leaf end)``.
+    """
+
+    buckets: Tuple[Bucket, ...]
+    leaf_sizes: Tuple[int, ...]
+    leaf_offsets: Tuple[int, ...]       # element offset in the flat buffer
+    bucket_starts: Tuple[int, ...]      # parallel to ``buckets``
+    bucket_sizes: Tuple[int, ...]       # elements, parallel to ``buckets``
+    total: int
+
+
+def plan_flat_layout(leaf_sizes: Sequence[int], bucket_bytes: int, *,
+                     elem_bytes: int = 4,
+                     shortest_first: bool = True) -> FlatLayout:
+    """Plan buckets over ``leaf_sizes`` (elements) and derive flat offsets.
+
+    Because greedy packing consumes leaves in tree order, each bucket's
+    indices form a contiguous range; the flat buffer is laid out in the
+    same order, making every bucket a contiguous slice.
+    """
+    buckets = plan_buckets([s * elem_bytes for s in leaf_sizes], bucket_bytes,
+                           shortest_first=shortest_first)
+    offsets: List[int] = []
+    off = 0
+    for s in leaf_sizes:
+        offsets.append(off)
+        off += s
+    starts, sizes = [], []
+    for b in buckets:
+        lo, hi = b.indices[0], b.indices[-1]
+        assert b.indices == tuple(range(lo, hi + 1)), \
+            "greedy packing must yield contiguous tree-order buckets"
+        starts.append(offsets[lo])
+        sizes.append(offsets[hi] + leaf_sizes[hi] - offsets[lo])
+    return FlatLayout(buckets=tuple(buckets), leaf_sizes=tuple(leaf_sizes),
+                      leaf_offsets=tuple(offsets),
+                      bucket_starts=tuple(starts), bucket_sizes=tuple(sizes),
+                      total=off)
+
+
+# --------------------------------------------------------------------------- #
+# pack / unpack
+# --------------------------------------------------------------------------- #
+def pack_leaves(leaves: Sequence[jax.Array],
+                dtype=jnp.float32) -> jax.Array:
+    """Scatter every leaf (raveled, cast) into one flat buffer.
+
+    A single ``concatenate`` — one kernel writing each operand at its
+    offset — rather than per-bucket temporary concats.
+    """
+    if len(leaves) == 1:
+        return leaves[0].astype(dtype).ravel()
+    return jnp.concatenate([l.astype(dtype).ravel() for l in leaves])
+
+
+def bucket_slice(flat: jax.Array, layout: FlatLayout, k: int) -> jax.Array:
+    """Zero-copy view of bucket ``k`` (static slice; XLA aliases it)."""
+    start = layout.bucket_starts[k]
+    return jax.lax.slice(flat, (start,), (start + layout.bucket_sizes[k],))
+
+
+def unpack_bucket(vec: jax.Array, layout: FlatLayout, k: int,
+                  leaves: Sequence[jax.Array]) -> List[Tuple[int, jax.Array]]:
+    """Split a reduced bucket back into ``(leaf_index, leaf)`` views.
+
+    ``leaves`` supplies each leaf's shape/dtype (abstract values suffice).
+    """
+    out = []
+    start = layout.bucket_starts[k]
+    for i in layout.buckets[k].indices:
+        off = layout.leaf_offsets[i] - start
+        ref = leaves[i]
+        out.append((i, jax.lax.slice(vec, (off,), (off + ref.size,))
+                    .reshape(ref.shape).astype(ref.dtype)))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# flat wire round-trip (the PS data plane)
+# --------------------------------------------------------------------------- #
+def flat_compress_roundtrip(tree: Params, *, block: int = 256
+                            ) -> Tuple[Params, float]:
+    """int8-quantize a pytree as ONE flat buffer and decode it with the
+    fused dequantize+norm kernel.
+
+    This is what an aggregator host receiving the update executes: the wire
+    carries the flat int8 payload + scales, and the fused
+    ``dequant_aggregate`` pass both reconstructs f32 and produces
+    ``||u||^2`` without a second HBM sweep.  Returns the decoded tree and
+    ``||u||`` (so callers don't pay a separate norm pass).
+
+    Each leaf is zero-padded to a ``block`` multiple before packing so no
+    quantization scale block ever spans a leaf boundary — a tiny-magnitude
+    leaf (bias, layernorm) sharing a block with a large-magnitude
+    neighbor would otherwise round to all-zero int8 and never train.  The
+    pad zeros cost < ``block`` elements per leaf on the wire and add
+    nothing to the norm.
+    """
+    from ..kernels.ops import dequant_aggregate_op, quantize_op
+
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    flat = pack_leaves([jnp.pad(l.astype(jnp.float32).ravel(),
+                                (0, -l.size % block)) for l in leaves])
+    q, s = quantize_op(flat, block=block)
+    decoded, ssq = dequant_aggregate_op(
+        q[None, :], s[None, :], jnp.ones((1,), jnp.float32),
+        block=block, orig_len=flat.size)
+    out, off = [], 0
+    for leaf in leaves:
+        out.append(jax.lax.slice(decoded, (off,), (off + leaf.size,))
+                   .reshape(leaf.shape).astype(leaf.dtype))
+        off += leaf.size + (-leaf.size % block)
+    norm = jnp.sqrt(ssq)
+    return jax.tree_util.tree_unflatten(treedef, out), float(norm)

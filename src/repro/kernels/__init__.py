@@ -1,15 +1,18 @@
 """Pallas TPU kernels for the framework's compute hot-spots.
 
-* ``flash_attention`` — blockwise online-softmax attention (every attn arch)
-* ``grad_aggregate``  — fused weighted-sum + norm (the MLfabric aggregator op)
-* ``quantize``        — int8 block quantization (gradient compression)
+* ``flash_attention``    — blockwise online-softmax attention (attn archs)
+* ``grad_aggregate``     — fused weighted-sum + norm (the aggregator op)
+* ``dequant_aggregate``  — fused int8 dequantize + weighted-sum + norm
+                           (the aggregator's *receive* path for compressed
+                           inter-pod buckets; streams over N in VMEM)
+* ``quantize``           — int8 block quantization (gradient compression)
 
 Each has: the kernel (pl.pallas_call + BlockSpec), a jit wrapper in
 ``ops.py`` (interpret-mode on CPU), and a pure-jnp oracle in ``ref.py``.
 """
 
-from .ops import (compress_update, dequantize_op, flash_attention_op,
-                  grad_aggregate_op, quantize_op)
+from .ops import (compress_update, dequant_aggregate_op, dequantize_op,
+                  flash_attention_op, grad_aggregate_op, quantize_op)
 
-__all__ = ["compress_update", "dequantize_op", "flash_attention_op",
-           "grad_aggregate_op", "quantize_op"]
+__all__ = ["compress_update", "dequant_aggregate_op", "dequantize_op",
+           "flash_attention_op", "grad_aggregate_op", "quantize_op"]

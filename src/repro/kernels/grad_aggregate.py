@@ -8,10 +8,13 @@ aggregated gradient — on an aggregator host the op is purely memory-bound,
 so the fusion is a straight ~33% traffic cut (read N + write 1 vs read
 N + write 1 + read 1).
 
-Tiling: grid over D/block_d column tiles; each step stages an [N, block_d]
-tile of the stacked updates into VMEM, reduces over N on the VPU, writes
-the aggregated tile and accumulates the tile's sum-of-squares into an SMEM
-scalar emitted per-tile (summed by the jit wrapper).
+Tiling: grid over ceil(D/block_d) column tiles; each step stages an
+[N, block_d] tile of the stacked updates into VMEM, reduces over N on the
+VPU, writes the aggregated tile and accumulates the tile's sum-of-squares
+into an SMEM scalar emitted per-tile (summed by the jit wrapper).  A
+ragged last tile is masked in-kernel (out-of-bounds lanes are excluded
+from the norm; their output writes are dropped by the pipeline), so
+callers never pay a pad-to-block copy + slice over the full gradient.
 """
 
 from __future__ import annotations
@@ -25,12 +28,18 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _agg_kernel(u_ref, w_ref, out_ref, ssq_ref):
+def _agg_kernel(u_ref, w_ref, out_ref, ssq_ref, *, block_d: int, d: int):
+    i = pl.program_id(0)
     u = u_ref[...].astype(jnp.float32)          # [N, block_d]
     w = w_ref[...].astype(jnp.float32)          # [N, 1]
-    agg = jnp.sum(u * w, axis=0)                # [block_d]
+    col = (jax.lax.broadcasted_iota(jnp.int32, (1, block_d), 1)
+           .reshape(block_d) + i * block_d)
+    valid = col < d
+    # OOB columns of a ragged last tile read garbage — zero them so the
+    # norm stays exact (their aggregated writes are dropped anyway)
+    agg = jnp.sum(jnp.where(valid[None, :], u, 0.0) * w, axis=0)
     out_ref[...] = agg.astype(out_ref.dtype)
-    ssq_ref[0] = jnp.sum(jnp.square(agg))
+    ssq_ref[0] = jnp.sum(jnp.where(valid, jnp.square(agg), 0.0))
 
 
 def grad_aggregate(updates: jax.Array, weights: jax.Array, *,
@@ -38,15 +47,15 @@ def grad_aggregate(updates: jax.Array, weights: jax.Array, *,
                    ) -> Tuple[jax.Array, jax.Array]:
     """updates: [N, D]; weights: [N] -> (agg [D] same dtype, sumsq [] f32).
 
-    D must be a multiple of ``block_d`` (the wrapper in ops.py pads).
+    Any D works: the last tile is masked in-kernel, not padded in HBM.
     """
     n, d = updates.shape
     block_d = min(block_d, d)
-    assert d % block_d == 0, (d, block_d)
-    n_blocks = d // block_d
+    n_blocks = pl.cdiv(d, block_d)
 
+    kernel = functools.partial(_agg_kernel, block_d=block_d, d=d)
     agg, ssq = pl.pallas_call(
-        _agg_kernel,
+        kernel,
         grid=(n_blocks,),
         in_specs=[
             pl.BlockSpec((n, block_d), lambda i: (0, i)),

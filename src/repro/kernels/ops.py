@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .dequant_aggregate import dequant_aggregate as _deq_agg
 from .flash_attention import flash_attention as _flash
 from .grad_aggregate import grad_aggregate as _agg
 from .quantize import dequantize as _dequant, quantize as _quant
@@ -34,14 +35,27 @@ def flash_attention_op(q, k, v, *, causal: bool = True, block_q: int = 128,
 
 @functools.partial(jax.jit, static_argnames=("block_d",))
 def grad_aggregate_op(updates, weights, *, block_d: int = 2048):
-    """Weighted-sum N stacked updates + fused ||agg||^2 (one HBM pass)."""
-    n, d = updates.shape
-    pad = (-d) % block_d
-    if pad:
-        updates = jnp.pad(updates, ((0, 0), (0, pad)))
-    agg, ssq = _agg(updates, weights, block_d=min(block_d, d + pad),
+    """Weighted-sum N stacked updates + fused ||agg||^2 (one HBM pass).
+
+    A ragged last tile is masked inside the kernel — no pad-to-block copy
+    and trailing slice over the full gradient anymore.
+    """
+    return _agg(updates, weights, block_d=block_d, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block", "block_d", "chunk_n",
+                                    "orig_len"))
+def dequant_aggregate_op(q, scales, weights, *, block: int = 256,
+                         block_d: int = 2048, chunk_n: int = 8,
+                         orig_len: Optional[int] = None):
+    """Fused aggregator receive path: int8 payloads -> dequantize ->
+    weighted sum -> ||agg||^2 in one VMEM-resident pass (the unfused
+    composition is ``vmap(dequantize_op)`` + ``grad_aggregate_op``, which
+    round-trips N dequantized f32 copies through HBM)."""
+    return _deq_agg(q, scales, weights, block=block, block_d=block_d,
+                    chunk_n=chunk_n, orig_len=orig_len,
                     interpret=not _on_tpu())
-    return agg[:d], ssq
 
 
 @functools.partial(jax.jit, static_argnames=("block",))

@@ -41,6 +41,24 @@ def grad_aggregate_ref(updates: jax.Array, weights: jax.Array,
     return agg.astype(updates.dtype), jnp.sum(jnp.square(agg))
 
 
+def dequant_aggregate_ref(q: jax.Array, scales: jax.Array,
+                          weights: jax.Array, *, block: int = 256,
+                          orig_len: Optional[int] = None
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Unfused oracle for the fused aggregator receive path.
+
+    q: [N, D_pad] int8; scales: [N, D_pad/block]; weights: [N]
+    -> (agg f32 [orig_len or D_pad], sumsq [] f32).
+    """
+    n, d_pad = q.shape
+    x = (q.reshape(n, d_pad // block, block).astype(jnp.float32)
+         * scales[:, :, None]).reshape(n, d_pad)
+    if orig_len is not None:
+        x = x[:, :orig_len]
+    agg = jnp.einsum("nd,n->d", x, weights.astype(jnp.float32))
+    return agg, jnp.sum(jnp.square(agg))
+
+
 def quantize_ref(x: jax.Array, *, block: int = 256
                  ) -> Tuple[jax.Array, jax.Array]:
     """Block-wise symmetric int8 quantization (gradient compression).

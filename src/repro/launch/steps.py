@@ -135,38 +135,80 @@ def build_mlfabric_train_step(cfg: ModelConfig, shape: ShapeConfig,
                               gamma: float = 0.9, remat: bool = True,
                               bucket_bytes: int = 4 * 2 ** 20,
                               shortest_first: bool = True,
-                              compress_inter: bool = False) -> StepBundle:
+                              compress_inter: bool = False,
+                              overlap_chunks: int = 1) -> StepBundle:
     """Training step where gradient reduction is the explicit MLfabric
-    schedule (bucketed, shortest-first, hierarchical, optionally int8
+    schedule (flat-bucketed, shortest-first, hierarchical, optionally int8
     cross-pod) instead of GSPMD's automatic all-reduce.
+
+    ``overlap_chunks > 1`` enables the chunked backward: the local batch is
+    split into chunks, and each chunk's bucket reductions are issued the
+    moment that chunk's gradients exist — barrier-chained in the planner's
+    shortest-first order across the whole step — so the inter-pod transfers
+    of chunk c overlap with chunk c+1's backprop (XLA sees no dependency
+    between them and its latency-hiding scheduler interleaves).  Per-bucket
+    results are accumulated as flat vectors and unpacked once at the end.
+    The trade: collective *volume* scales with the chunk count (each chunk
+    reduces a full-size gradient); ``compress_inter`` quarters that wire
+    cost, and the overlap hides it — DESIGN.md §8 records the accounting.
 
     Batch axes are shard_map-manual; "model" stays auto (GSPMD).  Params
     are replicated over the batch axes in this path (no data-axis FSDP) —
     suitable for the small/mid archs; DESIGN.md §3 records the trade.
     """
-    from ..dist.collectives import mlfabric_grad_reduce
+    from ..dist.collectives import (plan_reduce, reduce_flat_buckets,
+                                    unpack_reduced)
 
     batch_axes = shd.data_axes(mesh)
     inter = "pod" if "pod" in mesh.axis_names else None
     n_data_shards = 1
     for a in batch_axes:
         n_data_shards *= mesh.shape[a]
+    assert overlap_chunks >= 1
+    assert (shape.global_batch // n_data_shards) % overlap_chunks == 0, \
+        (shape.global_batch, n_data_shards, overlap_chunks)
 
     # activation policy without batch-axis references (manual inside)
     act = {"residual": P(None, "model", None), "logits": P(None, "model")}
+    reduce_kw = dict(intra_axis="data", inter_axis=inter,
+                     compress_inter=compress_inter, mean_over=n_data_shards)
 
     def local_step(params, opt_state, batch):
-        with sharding_policy(mesh, act):
-            def scalar_loss(p):
-                total, metrics = tf.loss_fn(p, batch, cfg=cfg, remat=remat)
-                return total, metrics
+        layout = plan_reduce(params, bucket_bytes=bucket_bytes,
+                             shortest_first=shortest_first)
 
-            (_, metrics), grads = jax.value_and_grad(
-                scalar_loss, has_aux=True)(params)
-        grads = mlfabric_grad_reduce(
-            grads, intra_axis="data", inter_axis=inter,
-            bucket_bytes=bucket_bytes, shortest_first=shortest_first,
-            compress_inter=compress_inter, mean_over=n_data_shards)
+        def chunk_grads(b):
+            with sharding_policy(mesh, act):
+                def scalar_loss(p):
+                    total, metrics = tf.loss_fn(p, b, cfg=cfg, remat=remat)
+                    return total, metrics
+                return jax.value_and_grad(scalar_loss, has_aux=True)(params)
+
+        if overlap_chunks == 1:
+            (_, metrics), grads = chunk_grads(batch)
+            reduced, _ = reduce_flat_buckets(grads, layout, **reduce_kw)
+        else:
+            chunks = {k: v.reshape(overlap_chunks,
+                                   v.shape[0] // overlap_chunks,
+                                   *v.shape[1:])
+                      for k, v in batch.items()}
+            reduced = [jnp.zeros((n,), jnp.float32)
+                       for n in layout.bucket_sizes]
+            token = jnp.zeros((), jnp.float32)
+            loss = aux = jnp.zeros((), jnp.float32)
+            for c in range(overlap_chunks):        # unrolled: chunk c+1's
+                # backward has no dependency on chunk c's collectives
+                (_, m), g = chunk_grads(
+                    {k: v[c] for k, v in chunks.items()})
+                vecs, token = reduce_flat_buckets(g, layout, token=token,
+                                                  **reduce_kw)
+                reduced = [r + v for r, v in zip(reduced, vecs)]
+                loss = loss + m["loss"]
+                aux = aux + m["aux_loss"]
+            reduced = [r / overlap_chunks for r in reduced]
+            metrics = {"loss": loss / overlap_chunks,
+                       "aux_loss": aux / overlap_chunks}
+        grads = unpack_reduced(reduced, layout, params)
         new_params, new_opt = momentum_sgd_update(params, grads, opt_state,
                                                   lr=lr, gamma=gamma)
         loss = jax.lax.pmean(metrics["loss"], "data")

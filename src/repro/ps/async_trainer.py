@@ -52,8 +52,16 @@ class AsyncTrainer:
                  bandwidth: BandwidthModel = N_STATIC,
                  aggregators: int = 2, seed: int = 0,
                  scenario: Optional[Scenario] = None,
+                 compress: bool = False,
                  eval_fn: Optional[Callable] = None, has_aux: bool = False):
         self.server = ParameterServer(init_params, gamma=gamma)
+        # ``compress`` routes every worker update through the flat-bucket
+        # int8 wire path (dist/flatbuf): one quantize over the packed
+        # update, fused dequantize+norm at the receiving end — the same
+        # data plane the in-graph collectives use.  The simulator sees the
+        # 4x-smaller wire size.
+        self.compress = compress
+        self.wire_size = update_size / (4.0 if compress else 1.0)
         self.data_fn = data_fn
         self.eval_fn = eval_fn
         self._worker_kw = dict(base_lr=base_lr, delay_adaptive=delay_adaptive,
@@ -98,9 +106,12 @@ class AsyncTrainer:
             params, batch, version=v, t=self._t,
             observed_delay=int(self.server.delays.mean) if w.delay_adaptive
             else 0)
+        if self.compress:
+            from ..dist.flatbuf import flat_compress_roundtrip
+            update, norm = flat_compress_roundtrip(update)
         assert worker not in self._payloads, f"{worker} already in flight"
         self._payloads[worker] = (update, v)
-        return mb(100), norm
+        return self.wire_size, norm
 
     def _on_commit(self, rec: CommitRecord) -> None:
         update, version_used = self._payloads.pop(rec.worker)

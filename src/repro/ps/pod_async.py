@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from ..core.network import mb
 from ..core.simulator import BandwidthModel, N_STATIC, StragglerModel, C1
+from ..dist.flatbuf import flat_compress_roundtrip
 from ..optim.sgd import momentum_sgd_init, momentum_sgd_update, update_norm
 from .async_trainer import AsyncTrainer, AsyncTrainResult
 
@@ -49,9 +50,7 @@ class PodAsyncTrainer(AsyncTrainer):
                  eval_fn: Optional[Callable] = None, has_aux: bool = False):
         self.local_steps = local_steps
         self.inner_lr = inner_lr
-        self.compress = compress
         self.compression_ratio = 4.0 if compress else 1.0
-        self.wire_size = update_size / self.compression_ratio
         self._base_loss_fn = loss_fn
         self._has_aux = has_aux
         scalar = (lambda p, b: loss_fn(p, b)[0]) if has_aux else loss_fn
@@ -63,6 +62,10 @@ class PodAsyncTrainer(AsyncTrainer):
                          compute_time=compute_time, straggler=straggler,
                          bandwidth=bandwidth, aggregators=0, seed=seed,
                          eval_fn=eval_fn, has_aux=has_aux)
+        # after super().__init__: the pod round-trips its *delta* itself in
+        # _on_compute, so base-class compress must stay off (the wire
+        # already carries the compressed size via update_size above)
+        self.compress = compress
 
     # a pod's "compute" = local_steps of SGD; the update is the delta
     def _on_compute(self, pod: str, version: int) -> Tuple[float, float]:
@@ -80,20 +83,14 @@ class PodAsyncTrainer(AsyncTrainer):
             lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
             w, params)
         if self.compress:
-            delta = self._roundtrip_compress(delta)
-        norm = float(update_norm(delta))
+            # Flat-bucket wire path: the whole delta is packed into ONE
+            # flat buffer and int8-quantized once (one kernel launch, the
+            # exact transfer unit the scheduler reasons about); the decode
+            # is the fused dequantize+norm aggregator pass, so ||u|| falls
+            # out of the same HBM sweep that reconstructs the update.
+            delta, norm = flat_compress_roundtrip(delta)
+        else:
+            norm = float(update_norm(delta))
         assert pod not in self._payloads, f"{pod} already in flight"
         self._payloads[pod] = (delta, v)
         return self.wire_size, norm
-
-    @staticmethod
-    def _roundtrip_compress(delta: Params) -> Params:
-        """int8 block quantization of the pod delta (what travels the slow
-        cross-pod link), via the Pallas kernel wrappers."""
-        from ..kernels.ops import dequantize_op, quantize_op
-        def rt(x):
-            flat = x.reshape(-1)
-            q, s = quantize_op(flat, block=256)
-            return dequantize_op(q, s, block=256,
-                                 orig_len=flat.size).reshape(x.shape)
-        return jax.tree.map(rt, delta)

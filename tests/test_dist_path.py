@@ -69,18 +69,25 @@ _MULTIDEV_SCRIPT = textwrap.dedent("""
              "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 128)),
                                    jnp.int32)}
     outs = {}
-    for path in ("auto", "mlfabric"):
-        b = build_step(cfg, shape, mesh, grad_path=path, lr=0.1)
+    cases = {"auto": dict(grad_path="auto"),
+             "mlfabric": dict(grad_path="mlfabric"),
+             "mlfabric_overlap": dict(grad_path="mlfabric",
+                                      overlap_chunks=2)}
+    for path, kw in cases.items():
+        b = build_step(cfg, shape, mesh, lr=0.1, **kw)
         f = jax.jit(b.fn, in_shardings=b.in_shardings,
                     out_shardings=b.out_shardings)
         p2, o2, m = f(jax.device_get(params), jax.device_get(opt), batch)
         outs[path] = (jax.device_get(p2), float(m["loss"]))
-    (pa, la), (pm, lm) = outs["auto"], outs["mlfabric"]
-    assert abs(la - lm) < 1e-3, (la, lm)
-    for a, b_ in zip(jax.tree.leaves(pa), jax.tree.leaves(pm)):
-        np.testing.assert_allclose(np.asarray(a, np.float32),
-                                   np.asarray(b_, np.float32),
-                                   rtol=3e-2, atol=3e-2)
+    (pa, la) = outs["auto"]
+    for path in ("mlfabric", "mlfabric_overlap"):
+        (pm, lm) = outs[path]
+        assert abs(la - lm) < 1e-3, (path, la, lm)
+        for a, b_ in zip(jax.tree.leaves(pa), jax.tree.leaves(pm)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b_, np.float32),
+                                       rtol=3e-2, atol=3e-2,
+                                       err_msg=path)
     print("MLFABRIC_PATH_OK")
 """)
 

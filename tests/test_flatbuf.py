@@ -1,0 +1,91 @@
+"""Property tests for the flat-bucket layout (dist/flatbuf.py).
+
+The data plane's zero-copy claims rest on two invariants: bucket ranges
+tile the flat buffer exactly (no gap, no overlap), and each bucket's leaf
+spans tile the bucket.  Hypothesis sweeps leaf-size distributions; a
+round-trip check pins pack -> slice -> unpack equality leaf by leaf.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.dist.flatbuf import (bucket_slice, pack_leaves, plan_flat_layout,
+                                unpack_bucket)
+
+leaf_sizes_st = st.lists(st.integers(min_value=1, max_value=5000),
+                         min_size=1, max_size=40)
+
+
+class TestLayoutInvariants:
+    @given(sizes=leaf_sizes_st,
+           bucket_kb=st.integers(min_value=1, max_value=64),
+           sjf=st.booleans())
+    @settings(max_examples=120, deadline=None)
+    def test_buckets_tile_flat_buffer(self, sizes, bucket_kb, sjf):
+        layout = plan_flat_layout(sizes, bucket_kb * 1024,
+                                  shortest_first=sjf)
+        assert layout.total == sum(sizes)
+        spans = sorted(zip(layout.bucket_starts, layout.bucket_sizes))
+        cursor = 0
+        for start, size in spans:
+            assert start == cursor, "gap or overlap between buckets"
+            assert size > 0
+            cursor += size
+        assert cursor == layout.total
+
+    @given(sizes=leaf_sizes_st,
+           bucket_kb=st.integers(min_value=1, max_value=64),
+           sjf=st.booleans())
+    @settings(max_examples=120, deadline=None)
+    def test_leaf_offsets_tile_each_bucket(self, sizes, bucket_kb, sjf):
+        layout = plan_flat_layout(sizes, bucket_kb * 1024,
+                                  shortest_first=sjf)
+        seen = []
+        for k, b in enumerate(layout.buckets):
+            cursor = layout.bucket_starts[k]
+            for i in b.indices:
+                assert layout.leaf_offsets[i] == cursor, \
+                    "leaf span gap/overlap inside bucket"
+                cursor += layout.leaf_sizes[i]
+                seen.append(i)
+            assert cursor == layout.bucket_starts[k] + layout.bucket_sizes[k]
+        assert sorted(seen) == list(range(len(sizes)))
+
+    @given(sizes=leaf_sizes_st)
+    @settings(max_examples=60, deadline=None)
+    def test_sjf_orders_buckets_by_bytes(self, sizes):
+        layout = plan_flat_layout(sizes, 8 * 1024, shortest_first=True)
+        nbytes = [b.nbytes for b in layout.buckets]
+        assert nbytes == sorted(nbytes)
+
+
+class TestRoundTrip:
+    @given(sizes=st.lists(st.integers(min_value=1, max_value=200),
+                          min_size=1, max_size=12),
+           bucket_kb=st.integers(min_value=1, max_value=4))
+    @settings(max_examples=25, deadline=None)
+    def test_pack_slice_unpack_equals_leaves(self, sizes, bucket_kb):
+        rng = np.random.default_rng(0)
+        leaves = [jnp.asarray(rng.normal(size=(s,)), jnp.float32)
+                  for s in sizes]
+        layout = plan_flat_layout(sizes, bucket_kb * 1024)
+        flat = pack_leaves(leaves)
+        out = [None] * len(leaves)
+        for k in range(len(layout.buckets)):
+            vec = bucket_slice(flat, layout, k)
+            assert vec.shape == (layout.bucket_sizes[k],)
+            for i, leaf in unpack_bucket(vec, layout, k, leaves):
+                out[i] = leaf
+        for got, want in zip(out, leaves):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_pack_preserves_leaf_order_and_dtype(self):
+        leaves = [jnp.ones((3, 2), jnp.bfloat16), jnp.arange(4, dtype=jnp.int32)]
+        flat = pack_leaves(leaves)
+        assert flat.dtype == jnp.float32 and flat.shape == (10,)
+        np.testing.assert_array_equal(np.asarray(flat[6:]), [0, 1, 2, 3])

@@ -16,6 +16,8 @@ from repro.kernels.quantize import dequantize, quantize
 from repro.kernels.ops import (dequantize_op, flash_attention_op,
                                grad_aggregate_op, quantize_op)
 
+pytestmark = pytest.mark.pallas_interpret
+
 TOL = dict(rtol=2e-2, atol=2e-2)
 
 
@@ -90,8 +92,9 @@ class TestGradAggregate:
         np.testing.assert_allclose(np.asarray(agg), 4.0)
         np.testing.assert_allclose(float(ssq), 16.0 * 512)
 
-    def test_padding_wrapper(self):
-        """ops wrapper pads ragged D to the block size and trims back."""
+    def test_ragged_d_through_wrapper(self):
+        """Ragged D runs masked in-kernel — no pad+slice copy in the
+        wrapper anymore."""
         u = jax.random.normal(jax.random.key(5), (3, 1000), jnp.float32)
         w = jnp.ones((3,))
         agg, _ = grad_aggregate_op(u, w, block_d=256)
@@ -99,6 +102,22 @@ class TestGradAggregate:
         assert agg.shape == (1000,)
         np.testing.assert_allclose(np.asarray(agg), np.asarray(agg_ref),
                                    **TOL)
+
+    @pytest.mark.parametrize("n,d,block_d", [
+        (3, 1000, 256),    # ragged last tile (1000 = 3*256 + 232)
+        (2, 100, 2048),    # single tile smaller than block_d
+        (4, 2049, 1024),   # one full tile + 1-lane ragged tail
+    ])
+    def test_ragged_last_block_norm_exact(self, n, d, block_d):
+        """The masked ragged tail must not leak OOB lanes into the norm."""
+        u = jax.random.normal(jax.random.key(9), (n, d), jnp.float32)
+        w = jax.random.uniform(jax.random.key(10), (n,), jnp.float32,
+                               0.5, 1.5)
+        agg, ssq = grad_aggregate(u, w, block_d=block_d, interpret=True)
+        agg_ref, ssq_ref = ref.grad_aggregate_ref(u, w)
+        np.testing.assert_allclose(np.asarray(agg), np.asarray(agg_ref),
+                                   **TOL)
+        np.testing.assert_allclose(float(ssq), float(ssq_ref), rtol=1e-5)
 
 
 class TestQuantize:

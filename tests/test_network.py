@@ -135,3 +135,85 @@ class TestNetworkState:
         # 100 MB over 10 Gbps = 80 ms (paper §2 arithmetic)
         net = NetworkState(["w", "s"], default_bw=gbps(10))
         assert net.transfer_time("w", "s", mb(100), 0.0) == pytest.approx(0.08)
+
+
+class TestSegmentCompaction:
+    """PR3 perf fix: segment lists must stay bounded under long churn."""
+
+    def test_relative_coalesce_absorbs_fp_noise(self):
+        """Reserve/release round-trips leave rates off by float rounding;
+        the relative-tolerance coalesce must still merge the segments."""
+        tl = Timeline(gbps(10.0))
+        base = gbps(10.0)
+        # simulate a noisy restore: adjacent segments differing by ~1 ulp
+        tl.times = [0.0, 1.0, 2.0, 3.0]
+        tl.rates = [base, base * (1 + 1e-12), base, base * (1 - 1e-12)]
+        tl._coalesce()
+        assert len(tl.times) == 1
+
+    def test_forget_before_preserves_future_queries(self):
+        tl = Timeline(10.0)
+        tl.set_rate_from(1.0, 5.0)
+        tl.set_rate_from(2.0, 7.0)
+        tl.set_rate_from(3.0, 2.0)
+        want = [tl.rate_at(t) for t in (2.5, 3.0, 10.0)]
+        want_int = tl.integrate(2.5, 8.0)
+        tl.forget_before(2.5)
+        assert len(tl.times) == 2          # [head, 3.0]
+        assert [tl.rate_at(t) for t in (2.5, 3.0, 10.0)] == want
+        assert tl.integrate(2.5, 8.0) == pytest.approx(want_int)
+
+    def test_release_into_forgotten_past_keeps_future_exact(self):
+        """A transfer reserved before the compaction horizon releases
+        cleanly: the future part of its profile is restored exactly."""
+        net = NetworkState(["w", "s"], gbps(10.0))
+        tr = net.reserve("w", "s", mb(100), 0.0)   # busy [0, 0.08]
+        net.compact(tr.t_end / 2.0)                # horizon mid-transfer
+        net.release(tr)
+        assert net.up["w"].rate_at(tr.t_end + 1.0) == pytest.approx(gbps(10))
+        # future residual is back at the full NIC rate
+        assert net.transfer_time("w", "s", mb(100), tr.t_end) == \
+            pytest.approx(tr.t_end + tr.t_end)
+
+    def test_churn_stays_bounded(self):
+        """Reserve/release + NIC re-rates for thousands of steps: with
+        periodic compaction no Timeline grows past a few dozen segments
+        (unbounded growth was the bug — each past breakpoint degrades
+        every later bisect)."""
+        import random
+        rng = random.Random(0)
+        workers = [f"w{i}" for i in range(4)]
+        net = NetworkState(workers + ["s"], gbps(10))
+        live, t = [], 0.0
+        for step in range(4000):
+            t += 0.01
+            if rng.random() < 0.1:
+                net.set_bandwidth(rng.choice(workers), t,
+                                  up=gbps(rng.choice([2.5, 5, 10])))
+            live.append(net.reserve(rng.choice(workers), "s",
+                                    mb(rng.uniform(10, 200)), t))
+            while len(live) > 3:
+                net.release(live.pop(0))
+            if step % 50 == 0:
+                net.compact(t)
+        segs = max(len(tl.times) for tl in
+                   list(net.up.values()) + list(net.down.values()))
+        assert segs < 40, f"segment list grew to {segs}"
+
+    def test_cluster_sim_compacts_timelines(self):
+        """ClusterSim compacts at batch boundaries: after a churny run the
+        actual-network timelines stay small."""
+        from repro.core import C2, ClusterSim, N2, SchedulerConfig
+        from repro.scenarios import paper_dynamic_cluster
+        cfg = SchedulerConfig(server="server",
+                              aggregators=["worker0", "worker1"],
+                              tau_max=50, mode="async", batch_interval=0.2)
+        sim = ClusterSim(16, cfg, update_size=mb(100), compute_time=0.05,
+                         straggler=C2, bandwidth=N2, seed=3,
+                         scenario=paper_dynamic_cluster(16, seed=1,
+                                                        horizon=20.0))
+        sim.run(until_time=20.0)
+        segs = max(len(tl.times) for tl in
+                   list(sim.net_actual.up.values())
+                   + list(sim.net_actual.down.values()))
+        assert segs < 80, f"simulator timelines grew to {segs}"
