@@ -53,9 +53,11 @@ def main():
         print(f"{div_max:8.2f} {replica.syncs:6d} "
               f"{replica.replication_savings:11.1%}")
 
-    # failure + recovery
+    # failure + recovery, through the §3.3 promotion helper for snapshot
+    # replicas (the same path ElasticSession uses — DESIGN.md §9)
+    from repro.ps.replica import promote_replica
     replica, loss, params = train_with_replica(2.0)
-    rec_params, rec_step, lost = replica.recover()
+    rec_params, rec_step, lost = promote_replica(replica)
     print(f"\nprimary failed at step 39; replica at step {rec_step}, "
           f"{lost} updates to regenerate (paper: 'fresh worker updates "
           f"using the latest model at the replica')")

@@ -22,8 +22,8 @@ from .replication import (ReplicationResult, ReplicationState,
 from .delay import DelayTracker, adadelay_lr, bounded_delay_lr, convergence_bound
 from .scheduler import BatchPlan, MLfabricScheduler, SchedulerConfig
 from .scenario import (AggregatorFail, BandwidthTrace, MonitorLagChange,
-                       Scenario, ScenarioEvent, WorkerJoin, WorkerLeave,
-                       bandwidth_trace)
+                       ReplicaPromote, Scenario, ScenarioEvent, ServerFail,
+                       WorkerJoin, WorkerLeave, bandwidth_trace)
 from .simulator import (BandwidthModel, ClusterSim, CommitRecord, SimResult,
                         StragglerModel, C1, C2, C3, N1, N2, N3, N_STATIC)
 from .baselines import (FairShareAsync, SyncSim, max_min_rates,
@@ -39,7 +39,8 @@ __all__ = [
     "DelayTracker", "adadelay_lr", "bounded_delay_lr", "convergence_bound",
     "BatchPlan", "MLfabricScheduler", "SchedulerConfig",
     "Scenario", "ScenarioEvent", "WorkerJoin", "WorkerLeave",
-    "AggregatorFail", "BandwidthTrace", "MonitorLagChange", "bandwidth_trace",
+    "AggregatorFail", "BandwidthTrace", "MonitorLagChange", "ServerFail",
+    "ReplicaPromote", "bandwidth_trace",
     "BandwidthModel", "ClusterSim", "CommitRecord", "SimResult",
     "StragglerModel", "C1", "C2", "C3", "N1", "N2", "N3", "N_STATIC",
     "FairShareAsync", "SyncSim", "max_min_rates", "ring_allreduce_time",

@@ -22,7 +22,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from .delay import DelayTracker
 from .network import gbps
 from .scenario import (AggregatorFail, BandwidthTrace, MonitorLagChange,
-                       Scenario, ScenarioEvent, WorkerJoin, WorkerLeave)
+                       ReplicaPromote, Scenario, ScenarioEvent, ServerFail,
+                       WorkerJoin, WorkerLeave)
 from .simulator import BandwidthModel, CommitRecord, N_STATIC, SimResult, StragglerModel, C1
 
 
@@ -71,6 +72,15 @@ class FairShareAsync:
     (the update is lost), bandwidth traces override NIC rates.  Monitor-lag
     events are no-ops (there is no scheduler to mislead) and aggregator
     failures are no-ops (there are no aggregators).
+
+    ``ServerFail`` replays via **checkpoint-restore** (the paper's §7.3
+    comparison point — vanilla PS has no bounded-divergence replica): all
+    progress since the last periodic checkpoint (every
+    ``checkpoint_interval`` sim-seconds) is rolled back, in-flight flows
+    die, and every worker idles for ``restore_time`` (reloading the
+    snapshot) before recomputing.  ``SimResult.recovery_time`` records
+    ``restore_time + lost progress window`` (the rolled-back commits stay
+    counted in the delay tracker; only the commit list is rewound).
     """
 
     def __init__(self, n_workers: int, server: str = "server", *,
@@ -78,7 +88,9 @@ class FairShareAsync:
                  straggler: StragglerModel = C1,
                  bandwidth: BandwidthModel = N_STATIC,
                  default_bw: float = gbps(10), seed: int = 0,
-                 scenario: Optional[Scenario] = None):
+                 scenario: Optional[Scenario] = None,
+                 checkpoint_interval: float = 10.0,
+                 restore_time: Optional[float] = None):
         self.workers = [f"worker{i}" for i in range(n_workers)]
         self.server = server
         self.update_size = update_size
@@ -91,9 +103,14 @@ class FairShareAsync:
         self.down = dict(self.up)
         self.result = SimResult()
         self.scenario = scenario
+        self.checkpoint_interval = checkpoint_interval
+        # default restore cost: re-reading one model-size snapshot at NIC rate
+        self.restore_time = (restore_time if restore_time is not None
+                             else update_size / default_bw)
         self._uid = itertools.count()
         self._dead: set = set()
         self._next_worker_id = n_workers
+        self._v_server = 0
 
     # -- scenario hook -------------------------------------------------- #
     def apply_event(self, t: float, ev: ScenarioEvent,
@@ -132,8 +149,29 @@ class FairShareAsync:
                     self.up[ev.host] = ev.up
                 if ev.down is not None:
                     self.down[ev.host] = ev.down
-        elif isinstance(ev, (AggregatorFail, MonitorLagChange)):
-            pass  # vanilla async has neither aggregators nor a monitor
+        elif isinstance(ev, ServerFail):
+            # checkpoint-restore: rewind to the last periodic snapshot,
+            # lose in-flight pushes, idle everyone through the restore
+            last_ckpt = (math.floor(t / self.checkpoint_interval)
+                         * self.checkpoint_interval)
+            kept = [c for c in self.result.commits if c.time <= last_ckpt]
+            self.result.rolled_back += len(self.result.commits) - len(kept)
+            self.result.commits = kept
+            self.result.server_fails += 1
+            self._v_server = len(kept)
+            for fid in list(flows):
+                flows.pop(fid)
+                self.result.scenario_drops += 1
+                self.result.drops += 1
+            compute_done.clear()
+            for w in self.workers:
+                heapq.heappush(
+                    compute_done,
+                    (t + self.restore_time
+                     + self.compute_time * self.straggler.sample(self.rng), w))
+            self.result.recovery_time = self.restore_time + (t - last_ckpt)
+        elif isinstance(ev, (AggregatorFail, MonitorLagChange, ReplicaPromote)):
+            pass  # vanilla async: no aggregators, no monitor, no replica
         else:
             raise TypeError(f"unknown scenario event {ev!r}")
         self.result.scenario_events_applied += 1
@@ -149,7 +187,6 @@ class FairShareAsync:
         for w in self.workers:
             heapq.heappush(compute_done,
                            (self.compute_time * self.straggler.sample(self.rng), w))
-        v_server = 0
 
         while t < until_time and self.result.n_commits < until_commits:
             rates = max_min_rates([(fid, f[1], self.server)
@@ -179,8 +216,9 @@ class FairShareAsync:
                 _, w, v_used = flows.pop(fid_done)
                 rec = CommitRecord(time=t, worker=w, uid=fid_done,
                                    version_used=v_used,
-                                   version_committed=v_server, aggregated=False)
-                v_server += 1
+                                   version_committed=self._v_server,
+                                   aggregated=False)
+                self._v_server += 1
                 self.result.commits.append(rec)
                 self.result.delay.record(rec.delay)
                 self.result.bytes_to_server += self.update_size
@@ -190,7 +228,8 @@ class FairShareAsync:
             elif t == t_comp:
                 _, w = heapq.heappop(compute_done)
                 if w not in self._dead:
-                    flows[next(self._uid)] = [self.update_size, w, v_server]
+                    flows[next(self._uid)] = [self.update_size, w,
+                                              self._v_server]
             elif t == next_bw:
                 for h in self.workers:
                     self.up[h] = self.bandwidth.sample(self.rng)
@@ -238,6 +277,9 @@ def tree_allreduce_time(size: float, bws: Sequence[float],
 @dataclass
 class SyncResult:
     iteration_times: List[float] = field(default_factory=list)
+    # checkpoint-restore failover accounting (ServerFail events):
+    recovery_time: float = math.inf
+    rolled_back: int = 0
 
     @property
     def total_time(self) -> float:
@@ -254,14 +296,19 @@ class SyncSim:
     Scenario support is membership-only (synchronous SGD must reform the
     ring/tree at an iteration boundary anyway): ``WorkerJoin`` /
     ``WorkerLeave`` events grow/shrink the participant count at the first
-    boundary after their time; other events are ignored.
+    boundary after their time; ``ServerFail`` replays as checkpoint-restore
+    (iterations since the last ``checkpoint_interval`` snapshot are redone
+    and the restore itself costs ``restore_time``); other events are
+    ignored.
     """
 
     def __init__(self, n_workers: int, *, update_size: float,
                  compute_time: float = 0.1, straggler: StragglerModel = C1,
                  bandwidth: BandwidthModel = N_STATIC,
                  default_bw: float = gbps(10), variant: str = "ring",
-                 seed: int = 0, scenario: Optional[Scenario] = None):
+                 seed: int = 0, scenario: Optional[Scenario] = None,
+                 checkpoint_interval: float = 10.0,
+                 restore_time: Optional[float] = None):
         self.n = n_workers
         self.update_size = update_size
         self.compute_time = compute_time
@@ -271,6 +318,9 @@ class SyncSim:
         self.variant = variant
         self.rng = random.Random(seed)
         self.scenario = scenario
+        self.checkpoint_interval = checkpoint_interval
+        self.restore_time = (restore_time if restore_time is not None
+                             else update_size / default_bw)
 
     def run(self, n_iterations: int) -> SyncResult:
         res = SyncResult()
@@ -279,8 +329,9 @@ class SyncSim:
         bws = [self.default_bw] * self.n
         next_bw = self.bandwidth.period
         next_id = self.n
+        iter_ends: List[Tuple[float, float]] = []   # (end time, duration)
         pending = [e for e in (self.scenario or [])
-                   if isinstance(e, (WorkerJoin, WorkerLeave))]
+                   if isinstance(e, (WorkerJoin, WorkerLeave, ServerFail))]
         for it in range(n_iterations):
             while pending and pending[0].time <= t:
                 ev = pending.pop(0)
@@ -288,7 +339,24 @@ class SyncSim:
                     names.append(ev.worker or f"worker{next_id}")
                     next_id += 1
                     bws.append(ev.up if ev.up is not None else self.default_bw)
-                elif len(names) > 1 and ev.worker in names:
+                elif isinstance(ev, ServerFail):
+                    # checkpoint-restore at the iteration boundary: redo
+                    # every iteration since the last periodic snapshot,
+                    # plus the snapshot reload itself
+                    last_ckpt = (math.floor(t / self.checkpoint_interval)
+                                 * self.checkpoint_interval)
+                    redo = [d for te, d in iter_ends if te > last_ckpt]
+                    res.rolled_back += len(redo)
+                    penalty = self.restore_time + sum(redo)
+                    res.recovery_time = penalty
+                    res.iteration_times.append(penalty)
+                    t += penalty
+                    # the restore block is wall-clock work too: record it
+                    # so a LATER failure rewinding into this window redoes
+                    # it instead of under-counting
+                    iter_ends.append((t, penalty))
+                elif isinstance(ev, WorkerLeave) \
+                        and len(names) > 1 and ev.worker in names:
                     i = names.index(ev.worker)  # drop THIS worker's NIC slot
                     names.pop(i)
                     bws.pop(i)
@@ -301,6 +369,7 @@ class SyncSim:
                 comm = tree_allreduce_time(self.update_size, bws, seed=it)
             t += comp + comm
             res.iteration_times.append(comp + comm)
+            iter_ends.append((t, comp + comm))
             while t >= next_bw:
                 bws = [min(self.bandwidth.sample(self.rng),
                            self.bandwidth.sample(self.rng)) for _ in range(self.n)]

@@ -130,21 +130,35 @@ def plan_replication(order: Sequence[Update],
 
     n_frozen = prefix_at(t_last)
     # Updates the server will have applied by its last commit = punted backlog
-    # + the whole batch; replica will have applied the frozen prefix.
+    # + the whole batch; replica will have applied the frozen prefix.  The
+    # history term must be evaluated AT the replica's post-freeze frontier
+    # (fold the frozen norms in first) so that ``divergence_after`` equals
+    # what ``state.divergence()`` reports once the batch's bookkeeping is
+    # advanced — the two are the same quantity at the same frontier.
+    h_ub = state.h_norm_ub
+    for u in replica_queue[:n_frozen]:
+        h_ub = state.gamma * h_ub + u.norm
     pending_after = replica_queue[n_frozen:]
-    div = divergence_bound(state.h_norm_ub,
-                           [u.norm for u in pending_after], state.gamma)
+    div = divergence_bound(h_ub, [u.norm for u in pending_after], state.gamma)
 
-    delayed: List[int] = []
     # Lead reduction: hold the last server commits until more replica commits
-    # land, extending the frozen prefix until the bound is met.
+    # land, extending the frozen prefix until the bound is met.  Every
+    # extension step past ``n_frozen`` forces one more replica commit before
+    # the server's tail may apply, so one more server commit (from the END
+    # of the tentative order) is delayed — the delayed set must GROW with
+    # the extension, not stay pinned at the single last commit.  Only this
+    # batch's ``order`` can still be held (the punted backlog is already
+    # applied at the server), so the delay count saturates at ``len(order)``.
     extend = n_frozen
     while div > state.div_max and extend < len(replica_queue):
+        h_ub = state.gamma * h_ub + replica_queue[extend].norm
         extend += 1
-        delayed = [u.uid for u in order[-1:]]  # the last tentative server commit
         pending_after = replica_queue[extend:]
-        div = divergence_bound(state.h_norm_ub,
-                               [u.norm for u in pending_after], state.gamma)
+        div = divergence_bound(h_ub, [u.norm for u in pending_after],
+                               state.gamma)
+    k_delayed = min(extend - n_frozen, len(order))
+    delayed = [u.uid for u in order[len(order) - k_delayed:]] if k_delayed \
+        else []
     n_frozen = extend
 
     frozen = replica_queue[:n_frozen]

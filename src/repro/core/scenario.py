@@ -25,6 +25,14 @@ Event semantics (see DESIGN.md §7 for the full re-plan story):
                       trace into events.
 * ``MonitorLagChange`` — the monitor's report lag changes (paper §7 studies
                       scheduling under stale network views).
+* ``ServerFail``    — the primary parameter server dies (§3.3): in-flight
+                      server transfers are lost, pending updates enter the
+                      regenerate-list, and — when a replica is configured —
+                      the bounded-divergence replica is promoted (either
+                      immediately, or at an explicit ``ReplicaPromote``
+                      event if the timeline carries one).
+* ``ReplicaPromote``— explicitly promote the replica to primary (split
+                      from ``ServerFail`` to model detection/failover lag).
 
 Times are seconds on the simulator clock; ``ElasticSession.run_scenario``
 reinterprets them as step indices (its "clock" is the step counter).
@@ -81,6 +89,31 @@ class MonitorLagChange(ScenarioEvent):
     lag: float = 0.0
 
 
+@dataclass(frozen=True)
+class ServerFail(ScenarioEvent):
+    """The parameter server at ``server`` fails at ``time``.
+
+    ``server`` of ``""`` means the consumer's configured primary.  A
+    failure with no replica configured halts training (the paper's
+    motivation for §3.3); with a replica, promotion follows — at this
+    event when the timeline has no ``ReplicaPromote``, else at that event.
+    """
+
+    server: str = ""
+
+
+@dataclass(frozen=True)
+class ReplicaPromote(ScenarioEvent):
+    """Promote the configured replica to primary at ``time`` (only
+    meaningful after a ``ServerFail``; a no-op otherwise).
+
+    ``replica`` of ``""`` means the consumer's configured replica; naming
+    a host that is NOT the configured replica makes the event a no-op
+    (there is no such standby to promote)."""
+
+    replica: str = ""
+
+
 def bandwidth_trace(host: str,
                     points: Iterable[Tuple[float, float, float]],
                     ) -> List[BandwidthTrace]:
@@ -131,5 +164,6 @@ class Scenario:
 
 __all__ = [
     "Scenario", "ScenarioEvent", "WorkerJoin", "WorkerLeave",
-    "AggregatorFail", "BandwidthTrace", "MonitorLagChange", "bandwidth_trace",
+    "AggregatorFail", "BandwidthTrace", "MonitorLagChange", "ServerFail",
+    "ReplicaPromote", "bandwidth_trace",
 ]

@@ -24,6 +24,15 @@ them on the surviving topology), per-host bandwidth follows a trace, and the
 monitor's lag changes mid-run.  Membership changes reach the scheduler
 immediately (control-plane events, unlike data-plane bandwidth which is
 monitor-lagged).
+
+Fault tolerance (§3.3/§5.3, DESIGN.md §9): with ``cfg.replica`` set the
+simulator *enacts* the replication plan — frozen copies ride spare actual-
+network capacity, replica commits release in server-commit order, and
+``delayed_server_uids`` hold server commit events (§5.3 lead reduction).
+``ServerFail`` kills the primary (in-flight traffic lost, pending updates
+confiscated into the regenerate-list) and the replica is promoted —
+immediately, or at an explicit ``ReplicaPromote`` event — after which
+training continues from the replica's bounded-divergence frontier.
 """
 
 from __future__ import annotations
@@ -40,7 +49,8 @@ from .delay import DelayTracker
 from .network import NetworkState, gbps, mb
 from .ordering import Update
 from .scenario import (AggregatorFail, BandwidthTrace, MonitorLagChange,
-                       Scenario, ScenarioEvent, WorkerJoin, WorkerLeave)
+                       ReplicaPromote, Scenario, ScenarioEvent, ServerFail,
+                       WorkerJoin, WorkerLeave)
 from .scheduler import BatchPlan, MLfabricScheduler, SchedulerConfig
 
 
@@ -119,6 +129,15 @@ class SimResult:
     reroutes: int = 0             # in-flight updates re-planned (agg death)
     joins: int = 0
     leaves: int = 0
+    # fault-tolerance plane (§3.3 / §5.3):
+    replica_commits: int = 0          # updates applied at the replica
+    server_commits_delayed: int = 0   # lead-reduction holds (§5.3)
+    server_fails: int = 0
+    promotions: int = 0
+    recovery_time: float = math.inf   # fail -> first post-promotion commit
+    regen_pending: int = 0            # confiscated into the regenerate-list
+    regenerated: int = 0              # gap + regen-list size at promotion
+    rolled_back: int = 0              # checkpoint-restore baselines only
 
     @property
     def n_commits(self) -> int:
@@ -158,6 +177,8 @@ class ClusterSim:
         on_commit: Optional[Callable[[CommitRecord], None]] = None,
         on_drop: Optional[Callable[[str, int], None]] = None,
         on_join: Optional[Callable[[str, float], None]] = None,
+        on_replica_commit: Optional[Callable[[int, float], None]] = None,
+        on_promote: Optional[Callable[[float, int], None]] = None,
     ):
         self.n_workers = n_workers
         self.workers = [f"worker{i}" for i in range(n_workers)]
@@ -179,6 +200,8 @@ class ClusterSim:
         self.on_commit = on_commit
         self.on_drop = on_drop
         self.on_join = on_join
+        self.on_replica_commit = on_replica_commit
+        self.on_promote = on_promote
 
         hosts = list(self.workers) + [self.cfg.server]
         if self.cfg.replica:
@@ -208,6 +231,31 @@ class ClusterSim:
         self._inflight: Dict[int, dict] = {}       # uid -> {update, aggregator}
         self._commit_epoch: Dict[int, int] = {}    # uid -> live event epoch
         self._next_worker_id = n_workers
+
+        # fault-tolerance plane (§3.3): replica data path + failover state.
+        # The replica applies updates in SERVER-COMMIT order (§3.3 "same
+        # order"): server commits append uids to ``_replica_queue`` and a
+        # copy arrival only releases replica commits while the queue head
+        # has arrived, so the replica's state is always an exact prefix of
+        # the server's apply sequence.
+        self.v_replica = 0                         # replica commit frontier
+        self._replica_inflight: Dict[int, dict] = {}   # uid -> {update, transfer}
+        self._replica_epoch: Dict[int, int] = {}
+        self._replica_queue: List[int] = []        # server-commit order
+        self._replica_next = 0                     # queue release cursor
+        self._replica_arrived: set = set()         # copies landed, not released
+        self._replica_gap: Dict[int, dict] = {}    # server-committed, replica-pending
+        self._regen: List[dict] = []               # confiscated update metadata
+        self._stalled: set = set()                 # workers awaiting promotion restart
+        self._server_failed = False
+        self._replica_promoted = False
+        self._fail_time: Optional[float] = None
+        # only promotes that can actually fire (unnamed, or naming the
+        # configured replica) may suppress auto-promotion on ServerFail
+        self._promote_times = sorted(
+            ev.time for ev in (scenario or [])
+            if isinstance(ev, ReplicaPromote)
+            and (not ev.replica or ev.replica == self.cfg.replica))
 
     # ------------------------------------------------------------------ #
     def _push_event(self, t: float, kind: str, **payload) -> None:
@@ -256,6 +304,19 @@ class ClusterSim:
                                  host=ev.host, up=ev.up, down=ev.down)
         elif isinstance(ev, MonitorLagChange):
             self.monitor_lag = ev.lag
+        elif isinstance(ev, ServerFail):
+            self._apply_server_fail(t, ev.server or self.cfg.server)
+        elif isinstance(ev, ReplicaPromote):
+            # the event may name the standby; it must be the configured one
+            if not ev.replica or ev.replica == self.cfg.replica:
+                # consume this event's slot so a ServerFail at the SAME
+                # timestamp (authored after a no-op promote) still
+                # auto-promotes instead of waiting for it forever
+                try:
+                    self._promote_times.remove(ev.time)
+                except ValueError:
+                    pass
+                self._apply_promote(t)
         else:
             raise TypeError(f"unknown scenario event {ev!r}")
         self.result.scenario_events_applied += 1
@@ -305,11 +366,18 @@ class ClusterSim:
         # the dead group's reservations are released exactly once.
         if worker in self.aggregators:
             self._apply_aggregator_fail(t, worker)
-        # pending (not yet planned) updates from the leaver are lost
+        # pending (not yet planned) updates from the leaver are lost.  With
+        # a replica configured they enter the regenerate-list instead (the
+        # paper's recovery story: lost work is recovered by fresh worker
+        # updates, here from the survivors at promotion time); without one
+        # they are plain scenario drops.
         lost = [u for u in self._pending if u.worker == worker]
         self._pending = [u for u in self._pending if u.worker != worker]
         for u in lost:
-            self._drop_lost(u.uid)
+            if self.cfg.replica is not None:
+                self._confiscate(u.uid)
+            else:
+                self._drop_lost(u.uid)
         # in-flight updates *from* the leaver are lost mid-transfer: the
         # unfinished transfer's reservation is freed and its bytes refunded
         # (other members of the same aggregation group are unaffected —
@@ -324,7 +392,32 @@ class ClusterSim:
                     t, info["transfer"],
                     refund_server=size if direct else 0.0,
                     refund_network=size)
-                self._drop_lost(uid)
+                if self.cfg.replica is not None:
+                    self._confiscate(uid)
+                else:
+                    self._drop_lost(uid)
+        # in-flight *replica copies* sourced at the leaver: a copy of a
+        # SERVER-COMMITTED update (it is in the gap) is re-sourced from the
+        # server, which holds it — the replica stream must stay gap-free or
+        # the plan-time divergence bookkeeping (``advance_history`` on
+        # freeze) would be invalidated.  A copy of an update the leave
+        # itself just cancelled (never committed) is moot: both sides skip
+        # it, so the bound bookkeeping stays conservative.
+        for uid, info in list(self._replica_inflight.items()):
+            tr = info["transfer"]
+            if tr.src != worker or tr.t_end <= t:
+                continue
+            if uid in self._replica_gap and not self._server_failed:
+                self.net_actual.release(tr)
+                self._replica_epoch[uid] = self._replica_epoch.get(uid, 0) + 1
+                new_tr = self.net_actual.reserve(self.cfg.server,
+                                                 self.cfg.replica,
+                                                 info["update"].size, t)
+                info["transfer"] = new_tr
+                self._push_event(new_tr.t_end, "replica_arrive", uid=uid,
+                                 epoch=self._replica_epoch[uid])
+            else:
+                self._cancel_replica_copy(t, uid)
         # membership is control-plane: both network views drop the host now
         # (after releases, so the dead NIC's timelines end up flat zero)
         for net in (self.net_actual, self.net_lagged):
@@ -379,6 +472,129 @@ class ClusterSim:
         carry an older epoch and are ignored when they fire)."""
         self._commit_epoch[uid] = self._commit_epoch.get(uid, 0) + 1
 
+    def _confiscate(self, uid: int) -> None:
+        """Move a lost update into the regenerate-list (§3.3 recovery).
+
+        The trainer's payload slot is freed via ``on_drop`` (the tensor is
+        NOT replayed — regeneration means fresh updates from the promoted
+        model); a surviving owner is restarted at promotion time."""
+        meta = self._uid_meta.pop(uid, None)
+        if meta is None:
+            return
+        self._regen.append(meta)
+        self.result.regen_pending += 1
+        if self.on_drop:
+            self.on_drop(meta["worker"], meta["version"])
+        if meta["worker"] not in self._dead:
+            self._stalled.add(meta["worker"])
+
+    def _cancel_replica_copy(self, t: float, uid: int) -> None:
+        """Invalidate an in-flight replica copy and refund its bytes."""
+        self._replica_epoch[uid] = self._replica_epoch.get(uid, 0) + 1
+        info = self._replica_inflight.pop(uid, None)
+        if info is None:
+            return
+        if info["transfer"].t_end > t:
+            self.net_actual.release(info["transfer"])
+            self.result.bytes_to_replica -= info["update"].size
+            self.result.bytes_in_network -= info["update"].size
+
+    # ------------------------------------------------------------------ #
+    # server failure and replica promotion (§3.3)
+    # ------------------------------------------------------------------ #
+    def _apply_server_fail(self, t: float, host: str) -> None:
+        """The primary dies: in-flight server traffic is lost, pending
+        updates enter the regenerate-list, and (with a replica, unless the
+        timeline carries an explicit ``ReplicaPromote``) promotion runs
+        immediately.
+
+        This applies to the CURRENT primary — including a promoted
+        replica: a second failure after promotion finds no replica left
+        and halts training (the docstring semantics of ``ServerFail``)."""
+        if self._server_failed or host != self.cfg.server:
+            return
+        self._server_failed = True
+        self._fail_time = t
+        self.result.server_fails += 1
+        # every server-bound transfer dies with the server
+        released_aggregates: set = set()
+        for uid, info in list(self._inflight.items()):
+            self._cancel_commit(uid)
+            direct = info["aggregator"] is None
+            size = info["update"].size
+            self._release_unfinished(t, info["transfer"],
+                                     refund_server=size if direct else 0.0,
+                                     refund_network=size)
+            agg_tr = info.get("agg_transfer")
+            if agg_tr is not None and agg_tr.uid not in released_aggregates:
+                released_aggregates.add(agg_tr.uid)
+                self._release_unfinished(t, agg_tr, refund_server=agg_tr.size,
+                                         refund_network=agg_tr.size)
+            self._confiscate(uid)
+        self._inflight.clear()
+        # pending updates targeted the dead server -> regenerate-list
+        for u in self._pending:
+            self._confiscate(u.uid)
+        self._pending.clear()
+        # replica copies re-sourced at the (now dead) server can never land
+        for uid, info in list(self._replica_inflight.items()):
+            if info["transfer"].src == host:
+                self._cancel_replica_copy(t, uid)
+        for net in (self.net_actual, self.net_lagged):
+            net.set_bandwidth(host, t, up=0.0, down=0.0)
+        # promote immediately unless an explicit ReplicaPromote can STILL
+        # fire (one that already fired before the failure was a no-op and
+        # must not suppress the automatic promotion — training would halt
+        # forever despite a healthy replica)
+        if self.cfg.replica is not None \
+                and not any(pt >= t for pt in self._promote_times):
+            self._apply_promote(t)
+
+    def _apply_promote(self, t: float) -> None:
+        """Promote the replica to primary: it keeps its (bounded-divergence)
+        model, the committed-version counter rolls back to the replica's
+        frontier, and surviving workers whose updates were confiscated
+        restart compute against the promoted model — the paper's "fresh
+        worker updates using the latest model at the replica"."""
+        if self._replica_promoted or self.cfg.replica is None \
+                or not self._server_failed:
+            return
+        self._server_failed = False
+        self._replica_promoted = True
+        self.result.promotions += 1
+        # copies still in flight are cancelled: their content is the gap,
+        # which is regenerated rather than replayed
+        for uid in list(self._replica_inflight):
+            self._cancel_replica_copy(t, uid)
+        self.cfg.server = self.cfg.replica     # same host, new role
+        self.cfg.replica = None                # replication plane retires
+        gap = len(self._replica_gap)
+        self.result.regenerated += gap + len(self._regen)
+        self._replica_gap.clear()
+        self._replica_arrived.clear()
+        self._replica_queue = []
+        self._replica_next = 0
+        self.v_server = self.v_replica         # roll back to the frontier
+        self.scheduler.v_server = self.v_replica
+        # updates computed during the failed window carry version stamps
+        # from the PRE-rollback counter; clamp them to the promoted
+        # frontier or they would commit with negative delay and corrupt
+        # the delay statistics (and the delay-adaptive LR downstream)
+        for u in self._pending:
+            u.version = min(u.version, self.v_replica)
+        for meta in self._uid_meta.values():
+            meta["version"] = min(meta["version"], self.v_replica)
+        if self.on_promote:
+            self.on_promote(t, gap)
+        for w in sorted(self._stalled):
+            if w in self._dead or w not in self.workers:
+                continue   # regeneration falls to the remaining survivors
+            pull = self.net_actual.transfer_time(self.cfg.server, w,
+                                                 self.model_size, t)
+            self._schedule_compute(w, pull)
+        self._stalled.clear()
+        self._regen.clear()
+
     # ------------------------------------------------------------------ #
     # event handlers
     # ------------------------------------------------------------------ #
@@ -421,7 +637,20 @@ class ClusterSim:
         # long churn scenarios grow every Timeline without bound
         self.net_actual.compact(t)
         self.net_lagged.compact(t)
+        if self._server_failed:
+            # primary down, replica not yet promoted: nothing can be
+            # planned (the batch clock keeps ticking so scheduling resumes
+            # the moment promotion lands); freshly computed updates keep
+            # accruing in ``_pending`` and commit after promotion
+            return
         if not self._pending:
+            # §5.3 bookkeeping continues even on empty batches: the
+            # divergence bound is a property of the replica's lag, not of
+            # this batch's traffic, so the trace must not skip quiet (or
+            # punt-everything) batches — those are exactly where it grows
+            if self.cfg.replica is not None:
+                self.result.replica_divergence_trace.append(
+                    (t, self.scheduler.replication_state.divergence()))
             return
         batch, self._pending = self._pending, []
 
@@ -444,16 +673,24 @@ class ClusterSim:
             if meta["worker"] not in self._dead:
                 self._schedule_compute(meta["worker"], t)
 
+        if plan.replication is not None:
+            # record the bound on EVERY planned batch (a batch that punts
+            # everything is precisely when divergence grows)
+            self.result.replica_divergence_trace.append(
+                (t, plan.replication.divergence_after))
+            t_catchup = self._enact_replica(plan.replication, t)
+            # §5.3 lead reduction made real: the held server commits do
+            # not apply until the extended frozen prefix has landed
+            delayed = set(plan.replication.delayed_server_uids)
+            self.result.server_commits_delayed += len(delayed)
+            for uid in delayed:
+                if uid in commit_times and commit_times[uid] < t_catchup:
+                    commit_times[uid] = t_catchup
+
         for g in plan.order:
             self._push_event(commit_times[g.uid], "commit", uid=g.uid,
                              epoch=self._commit_epoch.get(g.uid, 0),
                              aggregated=plan.aggregation.assignment.get(g.uid, 0) != 0)
-
-        if plan.replication is not None and plan.replication.frozen:
-            for u in plan.replication.frozen:
-                self.result.bytes_to_replica += u.size
-            self.result.replica_divergence_trace.append(
-                (t, plan.replication.divergence_after))
 
     def _enact(self, plan: BatchPlan, t_now: float) -> Dict[int, float]:
         """Replay the plan's structure on the actual network -> true times.
@@ -499,6 +736,55 @@ class ClusterSim:
                         self._inflight[g.uid]["agg_transfer"] = tr
         return commit
 
+    def _enact_replica(self, rep, t_now: float) -> float:
+        """Enact this batch's frozen replica copies on the actual network.
+
+        Copies ride on *spare* capacity by construction: their reservations
+        are made after every server-bound reservation of the same batch, so
+        they only consume what the primary schedule left over.  Enactment
+        is direct source->replica per frozen update (the replica-aggregator
+        topology shapes the *plan*'s freeze/punt decision; see DESIGN.md
+        §9); a departed owner's copy is sourced from the server, which
+        holds the committed update.  Returns the catch-up time — when the
+        last copy of the frozen prefix lands (``t_now`` if nothing froze).
+        """
+        replica = self.cfg.replica
+        t_catchup = t_now
+        for u in rep.frozen:
+            src = u.worker if u.worker not in self._dead else self.cfg.server
+            tr = self.net_actual.reserve(src, replica, u.size,
+                                         max(u.t_avail, t_now))
+            t_catchup = max(t_catchup, tr.t_end)
+            self.result.bytes_to_replica += u.size
+            self.result.bytes_in_network += u.size
+            self._replica_inflight[u.uid] = {"update": u, "transfer": tr}
+            self._push_event(tr.t_end, "replica_arrive", uid=u.uid,
+                             epoch=self._replica_epoch.get(u.uid, 0))
+        return t_catchup
+
+    def _on_replica_arrive(self, t: float, uid: int, epoch: int = 0) -> None:
+        if epoch != self._replica_epoch.get(uid, 0):
+            return  # stale: copy was cancelled or re-sourced
+        self._replica_inflight.pop(uid, None)
+        self._replica_arrived.add(uid)
+        self._drain_replica_commits(t)
+
+    def _drain_replica_commits(self, t: float) -> None:
+        """Release replica commits strictly in server-commit order: the
+        queue head must both have server-committed (it is in the queue)
+        and have its copy landed (it is in ``_replica_arrived``)."""
+        while self._replica_next < len(self._replica_queue):
+            uid = self._replica_queue[self._replica_next]
+            if uid not in self._replica_arrived:
+                break
+            self._replica_next += 1
+            self._replica_arrived.discard(uid)
+            self._replica_gap.pop(uid, None)
+            self.v_replica += 1
+            self.result.replica_commits += 1
+            if self.on_replica_commit:
+                self.on_replica_commit(uid, t)
+
     def _on_commit(self, t: float, uid: int, aggregated: bool,
                    epoch: int = 0) -> None:
         if epoch != self._commit_epoch.get(uid, 0):
@@ -512,8 +798,20 @@ class ClusterSim:
         self.v_server += 1
         self.result.commits.append(rec)
         self.result.delay.record(rec.delay)
+        if self._replica_promoted and self._fail_time is not None \
+                and self.result.recovery_time == math.inf:
+            self.result.recovery_time = t - self._fail_time
         if self.on_commit:
             self.on_commit(rec)
+        if self.cfg.replica is not None:
+            # the server's apply sequence IS the replica's apply sequence:
+            # this uid joins the release queue (and the gap, until its
+            # copy lands and every earlier commit has been released).
+            # After ``on_commit`` — the trainer stages the committed
+            # payload for the replica inside that callback.
+            self._replica_gap[uid] = meta
+            self._replica_queue.append(uid)
+            self._drain_replica_commits(t)
         # worker pulls the fresh model and starts the next mini-batch.
         if meta["worker"] not in self._dead:
             pull = self.net_actual.transfer_time(self.cfg.server, meta["worker"],

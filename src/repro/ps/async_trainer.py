@@ -21,6 +21,7 @@ from ..core.scenario import Scenario
 from ..core.scheduler import SchedulerConfig
 from ..core.simulator import (BandwidthModel, ClusterSim, CommitRecord,
                               N_STATIC, StragglerModel, C1)
+from .replica import ReplicaServer
 from .server import ParameterServer
 from .worker import Worker
 
@@ -34,6 +35,11 @@ class AsyncTrainResult:
     drops: int = 0
     delay_stats: Dict[str, float] = field(default_factory=dict)
     sim_time: float = 0.0
+    # fault-tolerance plane (replicate=True):
+    replica_commits: int = 0
+    promotions: int = 0
+    recovery_time: float = math.inf
+    regenerated: int = 0
 
     @property
     def final_loss(self) -> float:
@@ -53,8 +59,20 @@ class AsyncTrainer:
                  aggregators: int = 2, seed: int = 0,
                  scenario: Optional[Scenario] = None,
                  compress: bool = False,
+                 replicate: bool = False, div_max: float = 2.0,
                  eval_fn: Optional[Callable] = None, has_aux: bool = False):
         self.server = ParameterServer(init_params, gamma=gamma)
+        # ``replicate`` runs a real-tensor ReplicaServer (§3.3): the
+        # scheduler plans bounded-divergence replica copies on spare
+        # capacity, the simulator releases them in server-commit order,
+        # and this trainer applies the *identical* payload tensors (the
+        # int8 wire decode from PR3 happened once, at compute time — the
+        # replica copy reuses the decoded update) so primary and replica
+        # agree bit-for-bit on their common prefix.  On a ``ServerFail``
+        # scenario event the replica is promoted and training continues.
+        self.replica = ReplicaServer(init_params, gamma=gamma) \
+            if replicate else None
+        self._replica_pending: Dict[int, Tuple[Params, int]] = {}
         # ``compress`` routes every worker update through the flat-bucket
         # int8 wire path (dist/flatbuf): one quantize over the packed
         # update, fused dequantize+norm at the receiving end — the same
@@ -76,13 +94,17 @@ class AsyncTrainer:
 
         agg_hosts = [f"worker{i}" for i in range(min(aggregators, n_workers))]
         cfg = SchedulerConfig(server="server", aggregators=agg_hosts,
-                              tau_max=tau_max, gamma=gamma, mode="async")
+                              tau_max=tau_max, gamma=gamma, mode="async",
+                              replica="replica" if replicate else None,
+                              replica_aggregators=(), div_max=div_max)
         self.sim = ClusterSim(
             n_workers, cfg, update_size=update_size,
             compute_time=compute_time, straggler=straggler,
             bandwidth=bandwidth, seed=seed, scenario=scenario,
             on_compute=self._on_compute, on_commit=self._on_commit,
-            on_drop=self._on_drop, on_join=self._on_join)
+            on_drop=self._on_drop, on_join=self._on_join,
+            on_replica_commit=self._on_replica_commit if replicate else None,
+            on_promote=self._on_promote if replicate else None)
         self.result = AsyncTrainResult()
 
     # -- dynamic membership (scenario WorkerJoin events) -------------------- #
@@ -116,10 +138,36 @@ class AsyncTrainer:
     def _on_commit(self, rec: CommitRecord) -> None:
         update, version_used = self._payloads.pop(rec.worker)
         self.server.push(update, version_used)
+        if self.replica is not None:
+            # stage the identical (already wire-decoded) payload for the
+            # replica: the simulator releases it once the copy lands and
+            # every earlier server commit has been replica-applied
+            self._replica_pending[rec.uid] = (update, version_used)
         self.result.commits += 1
         if self.eval_fn and self.result.commits % 10 == 0:
             loss = float(self.eval_fn(self.server.params))
             self.result.losses.append((rec.time, loss))
+
+    def _on_replica_commit(self, uid: int, t: float) -> None:
+        update, version_used = self._replica_pending.pop(uid)
+        self.replica.apply_replicated(update, version_used, uid)
+        self.result.replica_commits += 1
+
+    def _on_promote(self, t: float, gap: int) -> None:
+        """§3.3 failover: the replica (an exact prefix of the primary's
+        apply sequence) becomes the primary; the ``gap`` updates it never
+        saw are regenerated by the restarted workers, not replayed.
+
+        The real-tensor flavor adopts the ``ReplicaServer`` instance
+        wholesale — params, version AND the momentum history the
+        divergence bound reasons over (a params-only restore through
+        ``promote_replica`` would zero ``h``; that helper is the
+        promotion path for the norm-tracking ``BoundedDivergenceReplica``
+        flavor used by ``ElasticSession``)."""
+        self.server = self.replica
+        self.replica = None
+        self._replica_pending.clear()
+        self.result.promotions += 1
 
     def _on_drop(self, worker: str, version: int) -> None:
         self._payloads.pop(worker, None)  # lost work (paper §5.1.3)
@@ -132,6 +180,8 @@ class AsyncTrainer:
         self.result.drops = sim_res.drops
         self.result.sim_time = sim_res.sim_time
         self.result.delay_stats = sim_res.delay.summary()
+        self.result.recovery_time = sim_res.recovery_time
+        self.result.regenerated = sim_res.regenerated
         if self.eval_fn:
             loss = float(self.eval_fn(self.server.params))
             self.result.losses.append((sim_res.sim_time, loss))

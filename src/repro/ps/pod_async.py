@@ -47,6 +47,7 @@ class PodAsyncTrainer(AsyncTrainer):
                  straggler: StragglerModel = C1,
                  bandwidth: BandwidthModel = N_STATIC,
                  compress: bool = False, seed: int = 0,
+                 scenario=None, replicate: bool = False, div_max: float = 2.0,
                  eval_fn: Optional[Callable] = None, has_aux: bool = False):
         self.local_steps = local_steps
         self.inner_lr = inner_lr
@@ -61,7 +62,8 @@ class PodAsyncTrainer(AsyncTrainer):
                          update_size=update_size / self.compression_ratio,
                          compute_time=compute_time, straggler=straggler,
                          bandwidth=bandwidth, aggregators=0, seed=seed,
-                         eval_fn=eval_fn, has_aux=has_aux)
+                         scenario=scenario, replicate=replicate,
+                         div_max=div_max, eval_fn=eval_fn, has_aux=has_aux)
         # after super().__init__: the pod round-trips its *delta* itself in
         # _on_compute, so base-class compress must stay off (the wire
         # already carries the compressed size via update_size above)

@@ -1,7 +1,8 @@
 """Pre-built dynamic-cluster scenarios (see ``repro.core.scenario``)."""
 
 from .library import (aggregator_outage, churn, congestion_wave,
-                      degraded_monitor, flash_crowd, paper_dynamic_cluster)
+                      degraded_monitor, flash_crowd, paper_dynamic_cluster,
+                      server_failover)
 
 __all__ = ["churn", "aggregator_outage", "flash_crowd", "congestion_wave",
-           "degraded_monitor", "paper_dynamic_cluster"]
+           "degraded_monitor", "server_failover", "paper_dynamic_cluster"]

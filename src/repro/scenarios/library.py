@@ -12,7 +12,8 @@ from typing import Optional, Sequence
 
 from ..core.network import gbps
 from ..core.scenario import (AggregatorFail, BandwidthTrace, MonitorLagChange,
-                             Scenario, ScenarioEvent, WorkerJoin, WorkerLeave,
+                             ReplicaPromote, Scenario, ScenarioEvent,
+                             ServerFail, WorkerJoin, WorkerLeave,
                              bandwidth_trace)
 
 
@@ -76,6 +77,24 @@ def degraded_monitor(*, at: float = 5.0, lag: float = 2.0,
     return Scenario(events, name=name)
 
 
+def server_failover(*, fail_at: float = 5.0,
+                    promote_at: Optional[float] = None,
+                    name: str = "server-failover") -> Scenario:
+    """§3.3/§5.3: the primary parameter server dies at ``fail_at``.
+
+    With ``promote_at`` unset the consumer promotes its replica at the
+    failure itself (zero detection lag); setting it models a failover
+    window during which training is stalled.  Consumers without a replica
+    (``FairShareAsync``, ``SyncSim``) replay the same timeline via
+    checkpoint-restore — the paper's recovery-time comparison."""
+    events: list[ScenarioEvent] = [ServerFail(time=fail_at)]
+    if promote_at is not None:
+        if promote_at < fail_at:
+            raise ValueError("promote_at must not precede fail_at")
+        events.append(ReplicaPromote(time=promote_at))
+    return Scenario(events, name=name)
+
+
 def paper_dynamic_cluster(n_workers: int, *, seed: int = 0,
                           horizon: float = 30.0,
                           name: str = "paper-dynamic-cluster") -> Scenario:
@@ -93,4 +112,4 @@ def paper_dynamic_cluster(n_workers: int, *, seed: int = 0,
 
 
 __all__ = ["churn", "aggregator_outage", "flash_crowd", "congestion_wave",
-           "degraded_monitor", "paper_dynamic_cluster"]
+           "degraded_monitor", "server_failover", "paper_dynamic_cluster"]

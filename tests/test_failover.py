@@ -1,0 +1,328 @@
+"""End-to-end fault-tolerance plane (§3.3 / §5.3): ServerFail scenarios,
+replica promotion, regenerate-list semantics, checkpoint-restore baselines,
+and the real-tensor mid-run kill test (subprocess, marked slow)."""
+
+import math
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.core.baselines import FairShareAsync, SyncSim
+from repro.core.network import gbps, mb
+from repro.core.scenario import (BandwidthTrace, ReplicaPromote, Scenario,
+                                 ServerFail, WorkerLeave)
+from repro.core.scheduler import SchedulerConfig
+from repro.core.simulator import ClusterSim, N_STATIC, StragglerModel
+from repro.scenarios import server_failover
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+NO_STRAGGLE = StragglerModel(0, 1)
+
+
+def rep_cfg(**kw):
+    base = dict(server="server", aggregators=["worker0"], tau_max=30,
+                mode="async", replica="replica", replica_aggregators=(),
+                div_max=3.0, gamma=0.9)
+    base.update(kw)
+    return SchedulerConfig(**base)
+
+
+def make_sim(n=6, cfg=None, scenario=None, **kw):
+    base = dict(update_size=mb(20), compute_time=0.05, straggler=NO_STRAGGLE,
+                bandwidth=N_STATIC, seed=4)
+    base.update(kw)
+    return ClusterSim(n, cfg or rep_cfg(), scenario=scenario, **base)
+
+
+class TestScenarioBuilder:
+    def test_server_failover_builder(self):
+        s = server_failover(fail_at=2.0, promote_at=3.5)
+        assert [type(e) for e in s] == [ServerFail, ReplicaPromote]
+        assert len(server_failover(fail_at=2.0)) == 1
+
+    def test_promote_before_fail_rejected(self):
+        with pytest.raises(ValueError):
+            server_failover(fail_at=2.0, promote_at=1.0)
+
+
+class TestServerFailSim:
+    def test_promotion_continues_training(self):
+        sim = make_sim(scenario=server_failover(fail_at=3.0))
+        res = sim.run(until_time=10.0)
+        assert res.server_fails == 1 and res.promotions == 1
+        post = [c for c in res.commits if c.time > 3.0]
+        assert post, "training must continue via the promoted replica"
+        assert math.isfinite(res.recovery_time) and res.recovery_time > 0
+        # the §5.3 guarantee held throughout
+        assert all(d <= 3.0 + 1e-9 for _, d in res.replica_divergence_trace)
+        assert res.replica_commits > 0
+        # the promoted host serves as the primary from then on
+        assert sim.cfg.server == "replica" and sim.cfg.replica is None
+
+    def test_no_replica_halts_training(self):
+        cfg = SchedulerConfig(server="server", aggregators=["worker0"],
+                              tau_max=30, mode="async")
+        sim = make_sim(cfg=cfg, scenario=server_failover(fail_at=3.0))
+        res = sim.run(until_time=10.0)
+        assert res.promotions == 0
+        assert not [c for c in res.commits if c.time > 3.2]
+        # the lost work is accounted, not silently vanished
+        assert res.regen_pending > 0
+
+    def test_explicit_promote_window_stalls_then_resumes(self):
+        sim = make_sim(scenario=server_failover(fail_at=2.0, promote_at=4.0))
+        res = sim.run(until_time=10.0)
+        assert res.promotions == 1
+        window = [c for c in res.commits if 2.1 < c.time < 4.0]
+        post = [c for c in res.commits if c.time > 4.0]
+        assert not window and post
+        # recovery time includes the whole failover window
+        assert res.recovery_time >= 2.0
+
+    def test_lead_reduction_actually_holds_commits(self):
+        """A starved replica link + tight bound must delay server commits
+        (the §5.3 hold), visibly stretching commit times."""
+        scen = Scenario([BandwidthTrace(time=0.0, host="replica",
+                                        down=gbps(0.3))])
+        sim = make_sim(cfg=rep_cfg(div_max=1.0), scenario=scen,
+                       monitor_lag=0.0)
+        res = sim.run(until_time=6.0)
+        assert res.server_commits_delayed > 0
+        assert all(d <= 1.0 + 1e-9 for _, d in res.replica_divergence_trace)
+
+    def test_no_negative_delays_after_rollback(self):
+        """Regression: updates computed during the failover window carried
+        pre-rollback version stamps and committed with negative delay."""
+        sim = make_sim(scenario=server_failover(fail_at=2.0, promote_at=4.0))
+        res = sim.run(until_time=10.0)
+        assert res.promotions == 1
+        assert all(c.delay >= 0 for c in res.commits)
+        assert res.delay.taus and min(res.delay.taus) >= 0
+
+    def test_stale_promote_does_not_suppress_auto_promotion(self):
+        """Regression: a ReplicaPromote that fired BEFORE the failure (a
+        no-op) must not make ServerFail wait for a promotion that can
+        never come — training would halt despite a healthy replica."""
+        scen = Scenario([ReplicaPromote(time=1.0), ServerFail(time=2.0)])
+        sim = make_sim(scenario=scen)
+        res = sim.run(until_time=6.0)
+        assert res.promotions == 1
+        assert [c for c in res.commits if c.time > 2.2]
+
+    def test_second_failure_kills_promoted_primary(self):
+        """Regression: a ServerFail AFTER promotion targets the promoted
+        primary — no replica remains, so training halts (it used to be
+        silently ignored, committing through a dead server)."""
+        scen = Scenario([ServerFail(time=2.0), ServerFail(time=5.0)])
+        sim = make_sim(scenario=scen)
+        res = sim.run(until_time=9.0)
+        assert res.server_fails == 2 and res.promotions == 1
+        assert [c for c in res.commits if 2.2 < c.time <= 5.0]
+        assert not [c for c in res.commits if c.time > 5.2]
+
+    def test_same_time_promote_before_fail_still_auto_promotes(self):
+        """Regression: a promote authored at the SAME timestamp as the
+        fail (but before it) fires as a no-op and must be consumed —
+        otherwise the fail would wait for it forever and hang."""
+        scen = Scenario([ReplicaPromote(time=2.0), ServerFail(time=2.0)])
+        res = make_sim(scenario=scen).run(until_time=6.0)
+        assert res.promotions == 1
+        assert [c for c in res.commits if c.time > 2.2]
+
+    def test_promote_naming_wrong_standby_is_noop(self):
+        scen = Scenario([ServerFail(time=2.0),
+                         ReplicaPromote(time=3.0, replica="not-a-standby")])
+        res = make_sim(scenario=scen).run(until_time=6.0)
+        # the mis-named promote cannot fire; the fail auto-promotes since
+        # no VALID explicit promote exists in the timeline
+        assert res.promotions == 1
+        assert [c for c in res.commits if 2.2 < c.time < 3.0]
+
+    def test_regenerated_counts_gap_and_confiscated(self):
+        sim = make_sim(scenario=server_failover(fail_at=3.0))
+        res = sim.run(until_time=8.0)
+        # at promotion the regenerate-list = confiscated in-flight/pending
+        # plus the server->replica gap; all are regenerated, none replayed
+        assert res.regenerated >= res.regen_pending > 0
+
+    def test_leaver_pending_enters_regen_list_with_replica(self):
+        """Satellite fix: a leaving worker's pending (not-yet-planned)
+        updates must enter the regenerate-list when a replica is
+        configured — previously they were silently dropped."""
+        scen = Scenario([WorkerLeave(time=0.07, worker="worker3")])
+        sim = make_sim(cfg=rep_cfg(batch_interval=0.5), scenario=scen)
+        res = sim.run(until_time=2.0)
+        assert res.regen_pending >= 1
+        assert res.scenario_drops == 0  # regen-list, not a silent drop
+
+    def test_leaver_pending_counted_without_replica(self):
+        scen = Scenario([WorkerLeave(time=0.07, worker="worker3")])
+        cfg = SchedulerConfig(server="server", aggregators=["worker0"],
+                              tau_max=30, mode="async", batch_interval=0.5)
+        res = make_sim(cfg=cfg, scenario=scen).run(until_time=2.0)
+        assert res.scenario_drops >= 1 and res.regen_pending == 0
+
+    def test_training_mode_conservation_under_failover(self):
+        """Every computed update is committed, dropped (incl. confiscated
+        for regeneration), or still tracked — nothing double-counted."""
+        seen = {"computed": 0, "committed": 0, "dropped": 0}
+
+        def on_compute(worker, version):
+            seen["computed"] += 1
+            return mb(20), 1.0
+
+        sim = make_sim(
+            scenario=server_failover(fail_at=2.0),
+            on_compute=on_compute,
+            on_commit=lambda rec: seen.__setitem__(
+                "committed", seen["committed"] + 1),
+            on_drop=lambda w, v: seen.__setitem__(
+                "dropped", seen["dropped"] + 1))
+        res = sim.run(until_time=6.0)
+        assert res.promotions == 1
+        assert seen["committed"] == res.n_commits
+        assert seen["computed"] == seen["committed"] + seen["dropped"] \
+            + len(sim._uid_meta)
+
+
+class TestCheckpointRestoreBaselines:
+    def test_fairshare_rolls_back_and_recovers(self):
+        van = FairShareAsync(6, update_size=mb(20), compute_time=0.05,
+                             straggler=NO_STRAGGLE, seed=0,
+                             scenario=server_failover(fail_at=3.0),
+                             checkpoint_interval=2.0)
+        res = van.run(until_time=8.0)
+        assert res.server_fails == 1
+        assert res.rolled_back > 0
+        # restore cost + the lost window since the t=2 snapshot
+        assert res.recovery_time == pytest.approx(van.restore_time + 1.0)
+        assert [c for c in res.commits if c.time > 3.0 + van.restore_time]
+        assert not [c for c in res.commits if 2.0 < c.time <= 3.0]
+
+    def test_syncsim_restore_penalty(self):
+        ss = SyncSim(8, update_size=mb(100), compute_time=0.1,
+                     straggler=NO_STRAGGLE, seed=0,
+                     scenario=server_failover(fail_at=3.0),
+                     checkpoint_interval=2.0)
+        res = ss.run(20)
+        assert res.rolled_back > 0
+        assert res.recovery_time > ss.restore_time  # redo work included
+
+    def test_syncsim_second_failure_redoes_restore_window(self):
+        """The restore block is wall-clock work: a later failure rewinding
+        into it must redo it (iter_ends records the penalty block)."""
+        scen = Scenario([ServerFail(time=3.0), ServerFail(time=9.0)])
+        ss = SyncSim(8, update_size=mb(100), compute_time=0.1,
+                     straggler=NO_STRAGGLE, seed=0, scenario=scen,
+                     checkpoint_interval=4.0)
+        res = ss.run(30)
+        single = SyncSim(8, update_size=mb(100), compute_time=0.1,
+                         straggler=NO_STRAGGLE, seed=0,
+                         scenario=Scenario([ServerFail(time=3.0)]),
+                         checkpoint_interval=4.0).run(30)
+        assert res.rolled_back > single.rolled_back
+        assert res.recovery_time > 0
+
+    def test_replica_promotion_beats_checkpoint_restore(self):
+        """The paper's §7.3 headline: bounded-divergence failover recovers
+        far faster than rewinding to a periodic checkpoint."""
+        scen = server_failover(fail_at=9.5)
+        fab = make_sim(scenario=scen).run(until_time=15.0)
+        van = FairShareAsync(6, update_size=mb(20), compute_time=0.05,
+                             straggler=NO_STRAGGLE, seed=4, scenario=scen,
+                             checkpoint_interval=10.0).run(until_time=15.0)
+        assert fab.promotions == 1 and van.rolled_back > 0
+        assert fab.recovery_time < van.recovery_time
+
+
+_FAILOVER_SCRIPT = textwrap.dedent("""
+    import sys; sys.path.insert(0, "src")
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core.network import gbps, mb
+    from repro.core.scenario import BandwidthTrace, Scenario, ServerFail
+    from repro.core.simulator import N_STATIC, StragglerModel
+    from repro.ps import AsyncTrainer
+
+    def quad_loss(p, b):
+        return jnp.sum(jnp.square(p["w"] - b["target"]))
+
+    TARGET = jnp.array([3.0, -2.0, 1.0, 0.5, -1.5, 2.5])
+    data_fn = lambda w, t: {"target": TARGET}
+    DIV = 0.75
+    KW = dict(n_workers=4, tau_max=8, base_lr=0.02, gamma=0.5,
+              delay_adaptive=False, update_size=mb(20), compute_time=0.05,
+              straggler=StragglerModel(0, 1), bandwidth=N_STATIC, seed=0,
+              replicate=True, div_max=DIV,
+              eval_fn=lambda p: quad_loss(p, {"target": TARGET}))
+    init = {"w": jnp.zeros(6)}
+    # throttle the replica downlink so copies genuinely trail the primary
+    slow = [BandwidthTrace(time=0.0, host="replica", down=gbps(0.35))]
+
+    # ---- never-failed reference; params recorded per committed version
+    ref = AsyncTrainer(init, quad_loss, data_fn,
+                       scenario=Scenario(list(slow)), **KW)
+    hist = {0: np.asarray(init["w"])}
+    orig_push = ref.server.push
+    def rec_push(u, v):
+        out = orig_push(u, v)
+        hist[out] = np.asarray(jax.device_get(ref.server.params["w"])).copy()
+        return out
+    ref.server.push = rec_push
+    res_a = ref.run(until_time=8.0)
+
+    # ---- identical run, primary killed mid-flight
+    tr = AsyncTrainer(init, quad_loss, data_fn,
+                      scenario=Scenario(list(slow) + [ServerFail(time=1.55)]),
+                      **KW)
+    cap = {}
+    orig_prom = tr._on_promote
+    def prom(t, gap):
+        cap["v_fail"] = len(tr.sim.result.commits)   # pre-fail frontier
+        orig_prom(t, gap)
+        cap["v_rep"] = tr.sim.v_replica
+        cap["gap"] = gap
+        cap["params"] = np.asarray(
+            jax.device_get(tr.server.params["w"])).copy()
+    tr.sim.on_promote = prom
+    res_b = tr.run(until_time=8.0)
+
+    assert res_b.promotions == 1, res_b
+    assert cap["v_rep"] <= cap["v_fail"], cap
+    # 1) §3.3 order invariant: the promoted replica is BIT-IDENTICAL to the
+    #    never-failed run at the replica's commit frontier (same updates,
+    #    same order, same momentum recursion)
+    np.testing.assert_allclose(cap["params"], hist[cap["v_rep"]],
+                               rtol=1e-6, atol=1e-6)
+    # 2) §5.3 bound: the promoted state is within Div_max of the
+    #    never-failed run at the PRE-FAIL frontier — the updates the
+    #    replica never saw cost at most the configured divergence
+    d = float(np.linalg.norm(hist[cap["v_fail"]] - cap["params"]))
+    assert d <= DIV + 1e-6, (d, DIV)
+    # 3) every traced bound held, in both runs
+    for res in (ref.sim.result, tr.sim.result):
+        assert all(x <= DIV + 1e-9 for _, x in res.replica_divergence_trace)
+    # 4) the killed run keeps training: commits resume and the loss keeps
+    #    falling from the promoted state toward the optimum
+    assert res_b.commits > cap["v_fail"], (res_b.commits, cap)
+    assert res_b.final_loss < quad_loss(
+        {"w": jnp.asarray(cap["params"])}, {"target": TARGET}), res_b
+    assert np.isfinite(res_b.recovery_time)
+    print("FAILOVER_OK",
+          f"v_fail={cap['v_fail']} v_rep={cap['v_rep']} gap={cap['gap']}",
+          f"divergence={d:.4f} recovery={res_b.recovery_time:.3f}s")
+""")
+
+
+@pytest.mark.slow
+def test_midrun_primary_kill_recovers_within_divmax():
+    """Real tensors, full stack: AsyncTrainer(replicate=True) killed
+    mid-run promotes its ReplicaServer and lands within Div_max of the
+    never-failed run (bit-identical at the replica frontier)."""
+    res = subprocess.run([sys.executable, "-c", _FAILOVER_SCRIPT],
+                         capture_output=True, text=True, timeout=600,
+                         cwd=_REPO_ROOT)
+    assert "FAILOVER_OK" in res.stdout, res.stderr[-2000:]

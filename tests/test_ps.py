@@ -9,7 +9,7 @@ from repro.core.network import mb
 from repro.core.simulator import N_STATIC, StragglerModel
 from repro.ps import (AsyncTrainer, ParameterServer, ReplicaServer,
                       SyncTrainer, Worker)
-from repro.ps.replica import recover_from_replica
+from repro.ps.replica import promote_replica
 
 
 def quad_loss(params, batch):
@@ -143,6 +143,6 @@ class TestReplica:
     def test_failover(self):
         rep = ReplicaServer({"w": jnp.zeros(2)})
         rep.apply_replicated({"w": jnp.ones(2)}, 0, uid=0)
-        params, version = recover_from_replica(rep)
+        params, version, lost = promote_replica(rep)
         np.testing.assert_allclose(np.asarray(params["w"]), 1.0)
-        assert version == 1
+        assert version == 1 and lost == 0

@@ -1,0 +1,77 @@
+"""Hypothesis property test tying ``ps/replica.py`` to
+``core/replication.py`` for the first time: the *exact* tensor divergence
+between a primary ``ParameterServer`` and a ``ReplicaServer`` that trails
+it by an arbitrary punt pattern never exceeds the norm-based bound the
+scheduler enforces (``ReplicationState.divergence``, eqs. 10-11).
+
+The stream mirrors the scheduler's bookkeeping batch by batch: every
+update is pushed at the primary immediately; a random prefix of the
+outstanding queue is "frozen" (applied at the replica, norms folded into
+``h_norm_ub`` via ``advance_history``) and the rest stays punted.  At
+every step the real L2 distance between the two models must sit under the
+bound the control plane would report for that state.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the hypothesis package")
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ordering import Update
+from repro.core.replication import ReplicationState
+from repro.ps.replica import ReplicaServer
+from repro.ps.server import ParameterServer
+
+DIM = 6
+
+
+def _update(rng) -> tuple:
+    """A random update tensor with a heavy-tailed magnitude, plus ||u||."""
+    u = rng.normal(size=DIM) * rng.exponential(scale=2.0)
+    arr = jnp.asarray(u, jnp.float32)
+    return {"w": arr}, float(jnp.linalg.norm(arr))
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1),
+       gamma=st.floats(0.0, 1.0),
+       n_updates=st.integers(1, 12),
+       data=st.data())
+def test_exact_divergence_never_exceeds_bound(seed, gamma, n_updates, data):
+    rng = np.random.default_rng(seed)
+    primary = ParameterServer({"w": jnp.zeros(DIM)}, gamma=gamma)
+    replica = ReplicaServer({"w": jnp.zeros(DIM)}, gamma=gamma)
+    state = ReplicationState(gamma=gamma, div_max=float("inf"))
+
+    queue = []   # (uid, update, norm): primary-committed, replica-pending
+    for uid in range(n_updates):
+        update, norm = _update(rng)
+        primary.push(update, uid)
+        queue.append((uid, update, norm))
+
+        # random punt pattern: the replica catches up on a random prefix
+        k = data.draw(st.integers(0, len(queue)), label=f"freeze@{uid}")
+        frozen, queue = queue[:k], queue[k:]
+        for fuid, fupd, fnorm in frozen:
+            replica.apply_replicated(fupd, fuid, fuid)
+        state.advance_history([fnorm for _, _, fnorm in frozen])
+        state.punted = [Update(uid=quid, worker="w0", size=1.0, version=0,
+                               norm=qnorm) for quid, _, qnorm in queue]
+
+        exact = replica.exact_divergence(primary)
+        bound = state.divergence()
+        assert exact <= bound * (1 + 1e-4) + 1e-4, (
+            exact, bound, gamma, uid, k)
+
+    # fully caught up -> models coincide and the bound collapses to 0
+    for fuid, fupd, _ in queue:
+        replica.apply_replicated(fupd, fuid, fuid)
+    state.punted = []
+    assert state.divergence() == 0.0
+    assert replica.exact_divergence(primary) <= 1e-3

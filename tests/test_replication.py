@@ -122,3 +122,59 @@ class TestPlanReplication:
     def test_history_bound_accumulates(self):
         _, state = self.run_plan(0.0)
         assert state.h_norm_ub > 0.0  # frozen commits folded into ||h|| bound
+
+
+class TestLeadReduction:
+    """Regression for the lead-reduction loop: the delayed server-commit set
+    must GROW with every extension step past ``n_frozen`` (the old loop
+    pinned it at the single last commit, so a bound needing k > 1 holds
+    reported only one)."""
+
+    def plan_slow_replica(self, div_max, n=4, gamma=0.0):
+        ups = [Update(uid=i, worker=f"w{i}", size=100.0, version=0, norm=1.0)
+               for i in range(n)]
+        net = NetworkState([u.worker for u in ups] + ["s", "r", "a1"], 100.0)
+        # starve the replica downlink: nothing lands by the server's last
+        # commit, so the whole batch starts out punted (n_frozen = 0)
+        net.set_bandwidth("r", 0.0, down=1e-4)
+        server_plan = aggregate_updates(ups, net, "s", [])
+        state = ReplicationState(gamma=gamma, div_max=div_max)
+        res = plan_replication(ups, server_plan.commit_times,
+                               server_plan.network, "r", ["a1"], state)
+        return ups, res
+
+    def test_one_delayed_commit_insufficient(self):
+        """gamma=0, unit norms: the bound equals the pending count, so
+        div_max=1.5 with 4 pending needs THREE extensions — and therefore
+        three delayed server commits, not one."""
+        ups, res = self.plan_slow_replica(div_max=1.5)
+        assert len(res.frozen) == 3          # extended 0 -> 3
+        assert res.divergence_after <= 1.5 + 1e-9
+        # the delayed set is the LAST k commits of the tentative order
+        assert res.delayed_server_uids == [u.uid for u in ups[-3:]]
+        assert len(res.delayed_server_uids) == 3
+
+    def test_delay_grows_with_tighter_bound(self):
+        _, loose = self.plan_slow_replica(div_max=3.5)
+        _, tight = self.plan_slow_replica(div_max=0.5)
+        assert len(loose.delayed_server_uids) == 1
+        assert len(tight.delayed_server_uids) == 4
+        assert len(tight.delayed_server_uids) > len(loose.delayed_server_uids)
+
+    def test_delayed_never_exceeds_batch_order(self):
+        """With a punted backlog, the extension count can exceed this
+        batch's size; only this batch's commits can still be held."""
+        ups, net = make_setup(n=2)
+        net.set_bandwidth("r", 0.0, down=1e-4)
+        state = ReplicationState(gamma=0.0, div_max=0.5)
+        # seed a 3-update punted backlog (server-committed last batch)
+        state.punted = [Update(uid=100 + i, worker=f"w{i % 2}", size=100.0,
+                               version=0, norm=1.0) for i in range(3)]
+        server_plan = aggregate_updates(ups, net, "s", [])
+        res = plan_replication(ups, server_plan.commit_times,
+                               server_plan.network, "r", ["a1"], state)
+        # 5 queued, bound 0.5 -> extend through the whole queue (5 steps),
+        # but only the 2 commits of THIS batch are delayable
+        assert len(res.delayed_server_uids) == 2
+        assert res.delayed_server_uids == [u.uid for u in ups]
+        assert res.divergence_after <= 0.5 + 1e-9

@@ -65,6 +65,28 @@ class TestClusterSim:
         assert res.replica_divergence_trace, "replication must have run"
         assert all(d <= 3.0 + 1e-9 for _, d in res.replica_divergence_trace)
         assert res.bytes_to_replica > 0
+        # the data path is real now: copies land and the replica commits
+        assert res.replica_commits > 0
+
+    def test_divergence_traced_even_when_everything_punts(self):
+        """Regression: batches whose replica plan freezes NOTHING (exactly
+        the moments divergence grows) used to leave no trace point.  A
+        starved replica downlink punts every copy; the trace must still
+        carry one bound per batch, and it must grow."""
+        from repro.core.scenario import BandwidthTrace, Scenario
+        cfg = ml_cfg(replica="replica", replica_aggregators=[],
+                     div_max=float("inf"), gamma=0.9)
+        scen = Scenario([BandwidthTrace(time=0.0, host="replica",
+                                        down=1e-4)])
+        sim = ClusterSim(4, cfg, update_size=mb(20), compute_time=0.05,
+                         straggler=StragglerModel(0, 1), bandwidth=N_STATIC,
+                         monitor_lag=0.0, seed=4, scenario=scen)
+        res = sim.run(until_time=5.0)
+        assert res.bytes_to_replica == 0 and res.replica_commits == 0
+        # one bound per scheduled batch at least (plus quiet batches)
+        assert len(res.replica_divergence_trace) >= res.scheduler_batches > 0
+        divs = [d for _, d in res.replica_divergence_trace]
+        assert divs[-1] > divs[0] > 0.0  # the punt-everything bound grows
 
     def test_training_mode_callbacks(self):
         seen = {"computes": 0, "commits": 0}
