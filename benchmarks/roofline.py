@@ -85,36 +85,10 @@ def _cache_bytes(cfg, shape) -> float:
     return per_layer
 
 
-def aggregator_hbm_traffic(n: int, d: int, *, quant_block: int = 256,
-                           compressed: bool = True) -> Dict[str, float]:
-    """Modeled aggregator-host HBM bytes for ONE inter-pod bucket.
-
-    ``n`` pod updates of ``d`` f32 elements arrive (int8 + per-block f32
-    scales when ``compressed``).  The aggregator is purely memory-bound
-    (paper §4: it computes the weighted sum of incoming updates), so HBM
-    bytes ARE the roofline.
-
-    unfused (kernels/quantize.py then kernels/grad_aggregate.py):
-        read the wire payload, WRITE n dequantized f32 copies, READ them
-        all back for the aggregate, write the f32 result (norm fused).
-    fused (kernels/dequant_aggregate.py):
-        read the wire payload + weights, write the f32 result — the
-        8*n*d-byte round-trip disappears.
-    """
-    scales = 4.0 * d / quant_block
-    if compressed:
-        wire = n * (d + scales)                  # int8 payload + scales
-    else:
-        wire = 4.0 * n * d                       # f32 on the wire
-        # uncompressed has no dequantize stage: both paths degenerate to
-        # the already-fused grad_aggregate (read n, write 1)
-        bytes_ = wire + 4.0 * n + 4.0 * d
-        return {"unfused_bytes": bytes_, "fused_bytes": bytes_,
-                "ratio": 1.0}
-    unfused = wire + 4.0 * n * d + (4.0 * n * d + 4.0 * n) + 4.0 * d
-    fused = wire + 4.0 * n + 4.0 * d
-    return {"unfused_bytes": unfused, "fused_bytes": fused,
-            "ratio": unfused / fused}
+# The aggregator HBM-traffic model moved to ``repro.obs.roofline`` so the
+# profiler can quote it without depending on the benchmarks/ scripts; this
+# re-export keeps the original import path working.
+from repro.obs.roofline import aggregator_hbm_traffic  # noqa: E402,F401
 
 
 def what_would_help(rec: Dict) -> str:

@@ -21,7 +21,11 @@ from repro.core import (C1, C2, C3, N1, N2, N3, N_STATIC, ClusterSim,
                         FairShareAsync, MLfabricScheduler, NetworkState,
                         SchedulerConfig, SyncSim, Update, aggregate_updates,
                         gbps, mb)
+from repro.core.harness import HookBus
 from repro.core.simulator import BandwidthModel, StragglerModel
+from repro.obs import (PhaseProfiler, Tracer, bench_record,
+                       measure_planner_latency, validate_chrome_trace,
+                       write_bench_record)
 from repro.scenarios import paper_dynamic_cluster, server_failover
 
 ROWS = []
@@ -526,28 +530,91 @@ def bench_kernel_flash_attention():
     record("kernel_flash_attention", dt, f"max_err={err:.2e}")
 
 
-def write_bench_json(out: dict, path: str) -> None:
-    """Write a benchmark record (BENCH_PR3.json: roofline bytes +
-    wall-clock for the fused aggregator path; BENCH_PR4.json: failover
-    recovery + divergence sweep) — CI's smoke job regenerates both.
-    Non-finite floats (e.g. ``recovery_time`` when no failure occurred)
-    become ``null``: ``json.dump`` would otherwise emit bare ``Infinity``,
-    which is not valid JSON."""
-    import json
-    import math
+def bench_planner_latency_vs_u(out: dict):
+    """ROADMAP item 2 / DESIGN.md §10: incremental-planner latency as the
+    batch size U grows.  The planner's cost must grow ~O(changes), so
+    ``latency_per_u_us`` should stay roughly flat — a super-linear bend in
+    this curve is the regression alarm the fast bench exists to ring."""
+    t0 = time.perf_counter()
+    rows = measure_planner_latency((8, 16, 32, 64), n_aggregators=8,
+                                   planner="incremental", repeats=3)
+    dt = time.perf_counter() - t0
+    out["planner_latency_vs_u"] = rows
+    record("planner_latency_vs_u", dt,
+           ";".join(f"U{int(r['u'])}={r['latency_s']*1e3:.1f}ms"
+                    f"({r['latency_per_u_us']:.0f}us/u)" for r in rows))
 
-    def _sanitize(x):
-        if isinstance(x, dict):
-            return {k: _sanitize(v) for k, v in x.items()}
-        if isinstance(x, list):
-            return [_sanitize(v) for v in x]
-        if isinstance(x, float) and not math.isfinite(x):
-            return None
-        return x
 
-    with open(path, "w") as f:
-        json.dump(_sanitize(out), f, indent=2, sort_keys=True)
-    print(f"wrote {path}", flush=True)
+def bench_trace_artifact(out: dict, path: str = "runs/trace_dynamic_failover.json"):
+    """DESIGN.md §10 trace artifact: the paper's dynamic-cluster scenario
+    and the §3.3 server-failover scenario, run with a real ``Tracer`` on
+    the hook bus, exported as ONE Chrome ``trace_event`` JSON (open it at
+    https://ui.perfetto.dev).  The export is validated structurally and
+    required to contain transfer, aggregate, commit and failover spans —
+    the acceptance bar for the telemetry plane."""
+    import os
+    t0 = time.perf_counter()
+    tracer = Tracer(process_name="mlfabric-sim")
+    profiler = PhaseProfiler()
+    hooks = HookBus([profiler], tracer=tracer)
+
+    # paper churn timeline: transfers/aggregates/commits + scenario instants
+    n, horizon = 16, 8.0
+    cfg = SchedulerConfig(server="server",
+                          aggregators=[f"worker{i}" for i in range(4)],
+                          tau_max=50, mode="async", batch_interval=0.25)
+    dyn = ClusterSim(n, cfg, update_size=mb(100), compute_time=0.05,
+                     straggler=C2, bandwidth=N2, seed=7,
+                     scenario=paper_dynamic_cluster(n, seed=0,
+                                                    horizon=horizon),
+                     hooks=hooks).run(until_time=horizon)
+
+    # §3.3 failover timeline: replica copies + the failover span
+    fcfg = SchedulerConfig(server="server",
+                           aggregators=["worker0", "worker1"],
+                           tau_max=30, mode="async", replica="replica",
+                           replica_aggregators=(), div_max=4.0, gamma=0.9)
+    fail = ClusterSim(8, fcfg, update_size=mb(50), compute_time=0.05,
+                      straggler=StragglerModel(0, 1), seed=7,
+                      scenario=server_failover(fail_at=3.0),
+                      hooks=hooks).run(until_time=7.0)
+
+    chrome = tracer.to_chrome()
+    problems = validate_chrome_trace(chrome)
+    cats = tracer.categories()
+    missing = [c for c in ("transfer", "aggregate", "commit", "failover")
+               if c not in cats]
+    if problems or missing:
+        raise RuntimeError(f"trace artifact invalid: problems={problems}, "
+                           f"missing categories={missing}")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tracer.write_chrome(path)
+    dt = time.perf_counter() - t0
+    out["trace_artifact"] = {
+        "path": path, "events": len(tracer.events),
+        "categories": {c: len(tracer.by_cat(c)) for c in cats},
+        "dynamic_commits": dyn.n_commits,
+        "failover_commits": fail.n_commits,
+        "failover_recovery_s": fail.recovery_time,
+        "hook_fires": hooks.metrics.snapshot(),
+        "profiler": profiler.summary()["metrics"],
+    }
+    record("trace_artifact", dt,
+           f"events={len(tracer.events)};cats={','.join(cats)};"
+           f"valid=True;path={path}")
+
+
+def write_bench_json(out: dict, path: str, *, config: dict = None) -> None:
+    """Write one schema-validated BENCH record (``repro.obs.bench_schema``
+    envelope: schema_version + git SHA + config echo + results), to the
+    canonical ``path`` CI uploads AND a timestamped copy under
+    ``runs/bench/`` for local history.  Non-finite floats (e.g.
+    ``recovery_time`` when no failure occurred) become ``null``."""
+    import os
+    name = os.path.splitext(os.path.basename(path))[0].lower()
+    rec = bench_record(name, config=config or {}, results=out)
+    for p in write_bench_record(rec, path):
+        print(f"wrote {p}", flush=True)
 
 
 def main(argv=None) -> None:
@@ -562,6 +629,7 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
     pr3: dict = {}
     pr4: dict = {}
+    obs: dict = {}
     if args.fast:
         bench_fig2_aggregation()
         bench_fused_dequant_aggregate(pr3)
@@ -569,8 +637,11 @@ def main(argv=None) -> None:
         bench_kernel_flash_attention()
         bench_failover_recovery(pr4)
         bench_divergence_vs_divmax(pr4)
+        bench_planner_latency_vs_u(obs)
+        bench_trace_artifact(obs)
         write_bench_json(pr3, "BENCH_PR3.json")
         write_bench_json(pr4, "BENCH_PR4.json")
+        write_bench_json(obs, "BENCH_OBS.json", config={"fast": True})
         return
     bench_fig2_aggregation()
     bench_table2_speedup_grid()
@@ -586,8 +657,11 @@ def main(argv=None) -> None:
     bench_kernel_flash_attention()
     bench_fused_dequant_aggregate(pr3)
     bench_flat_bucket_pack(pr3)
+    bench_planner_latency_vs_u(obs)
+    bench_trace_artifact(obs)
     write_bench_json(pr3, "BENCH_PR3.json")
     write_bench_json(pr4, "BENCH_PR4.json")
+    write_bench_json(obs, "BENCH_OBS.json", config={"fast": False})
 
 
 if __name__ == "__main__":

@@ -19,7 +19,8 @@ import random
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .delay import DelayTracker
+from ..obs.metrics import MetricsRegistry
+
 from .network import gbps
 from .scenario import (AggregatorFail, BandwidthTrace, MonitorLagChange,
                        ReplicaPromote, Scenario, ScenarioEvent, ServerFail,
@@ -141,8 +142,7 @@ class FairShareAsync:
             self.result.leaves += 1
             for fid in [fid for fid, f in flows.items() if f[1] == ev.worker]:
                 flows.pop(fid)
-                self.result.scenario_drops += 1
-                self.result.drops += 1
+                self.result.record_scenario_drop(count_total=True)
         elif isinstance(ev, BandwidthTrace):
             if ev.host in self.up and ev.host not in self._dead:
                 if ev.up is not None:
@@ -161,8 +161,7 @@ class FairShareAsync:
             self._v_server = len(kept)
             for fid in list(flows):
                 flows.pop(fid)
-                self.result.scenario_drops += 1
-                self.result.drops += 1
+                self.result.record_scenario_drop(count_total=True)
             compute_done.clear()
             for w in self.workers:
                 heapq.heappush(
@@ -219,8 +218,7 @@ class FairShareAsync:
                                    version_committed=self._v_server,
                                    aggregated=False)
                 self._v_server += 1
-                self.result.commits.append(rec)
-                self.result.delay.record(rec.delay)
+                self.result.record_commit(rec)
                 self.result.bytes_to_server += self.update_size
                 self.result.bytes_in_network += self.update_size
                 heapq.heappush(compute_done,
@@ -277,9 +275,28 @@ def tree_allreduce_time(size: float, bws: Sequence[float],
 @dataclass
 class SyncResult:
     iteration_times: List[float] = field(default_factory=list)
-    # checkpoint-restore failover accounting (ServerFail events):
-    recovery_time: float = math.inf
-    rolled_back: int = 0
+    # checkpoint-restore failover accounting (ServerFail events) lives in
+    # the same registry namespace as ``SimResult`` — one accumulator per
+    # quantity across every driver (DESIGN.md §10):
+    metrics: MetricsRegistry = field(default_factory=MetricsRegistry)
+
+    @property
+    def recovery_time(self) -> float:
+        return self.metrics.gauge("failover/recovery_time",
+                                  initial=math.inf).value
+
+    @recovery_time.setter
+    def recovery_time(self, value: float) -> None:
+        self.metrics.gauge("failover/recovery_time",
+                           initial=math.inf).set(value)
+
+    @property
+    def rolled_back(self) -> int:
+        return int(self.metrics.counter("failover/rolled_back").value)
+
+    @rolled_back.setter
+    def rolled_back(self, value: int) -> None:
+        self.metrics.counter("failover/rolled_back").value = value
 
     @property
     def total_time(self) -> float:

@@ -45,7 +45,9 @@ import random
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from ..obs.metrics import MetricsRegistry
 from .delay import DelayTracker
+from .harness import HookBus, NULL_BUS
 from .network import NetworkState, gbps, mb
 from .ordering import Update
 from .scenario import (AggregatorFail, BandwidthTrace, MonitorLagChange,
@@ -109,6 +111,32 @@ class CommitRecord:
         return self.version_committed - self.version_used
 
 
+# Event counters that live in the result's metrics registry rather than as
+# dataclass fields.  Attribute access (``result.joins``, ``result.joins += 1``)
+# keeps working through generated property pairs below, so every historical
+# call site and test is unchanged — but there is exactly ONE accumulator per
+# quantity, shared by ``ClusterSim``, the baselines, and any harness callback
+# reading ``result.metrics``.
+_COUNTER_METRICS: Dict[str, str] = {
+    # dynamic-cluster accounting:
+    "scenario_events_applied": "scenario/events_applied",
+    "scenario_drops": "scenario/drops",     # updates lost to WorkerLeave
+    "reroutes": "scenario/reroutes",        # in-flight re-plans (agg death)
+    "joins": "scenario/joins",
+    "leaves": "scenario/leaves",
+    # fault-tolerance plane (§3.3 / §5.3):
+    "replica_commits": "replica/commits",   # updates applied at the replica
+    "server_commits_delayed": "replica/server_commits_delayed",  # §5.3 holds
+    "server_fails": "failover/server_fails",
+    "promotions": "failover/promotions",
+    "regen_pending": "failover/regen_pending",   # confiscated for regen
+    "regenerated": "failover/regenerated",  # gap + regen-list at promotion
+    "rolled_back": "failover/rolled_back",  # checkpoint-restore baselines
+}
+
+_RECOVERY_METRIC = "failover/recovery_time"
+
+
 @dataclass
 class SimResult:
     commits: List[CommitRecord] = field(default_factory=list)
@@ -123,21 +151,9 @@ class SimResult:
     replica_divergence_trace: List[Tuple[float, float]] = field(default_factory=list)
     scheduler_batches: int = 0
     scheduler_wall_time: float = 0.0
-    # dynamic-cluster accounting:
-    scenario_events_applied: int = 0
-    scenario_drops: int = 0       # updates lost to WorkerLeave
-    reroutes: int = 0             # in-flight updates re-planned (agg death)
-    joins: int = 0
-    leaves: int = 0
-    # fault-tolerance plane (§3.3 / §5.3):
-    replica_commits: int = 0          # updates applied at the replica
-    server_commits_delayed: int = 0   # lead-reduction holds (§5.3)
-    server_fails: int = 0
-    promotions: int = 0
-    recovery_time: float = math.inf   # fail -> first post-promotion commit
-    regen_pending: int = 0            # confiscated into the regenerate-list
-    regenerated: int = 0              # gap + regen-list size at promotion
-    rolled_back: int = 0              # checkpoint-restore baselines only
+    # dynamic-cluster + fault-tolerance counters (see ``_COUNTER_METRICS``)
+    # plus anything a harness callback records, all in one registry:
+    metrics: MetricsRegistry = field(default_factory=MetricsRegistry)
 
     @property
     def n_commits(self) -> int:
@@ -146,6 +162,43 @@ class SimResult:
     @property
     def commit_rate(self) -> float:
         return self.n_commits / self.sim_time if self.sim_time > 0 else 0.0
+
+    @property
+    def recovery_time(self) -> float:
+        """Fail -> first post-promotion commit (inf: no recovery happened)."""
+        return self.metrics.gauge(_RECOVERY_METRIC, initial=math.inf).value
+
+    @recovery_time.setter
+    def recovery_time(self, value: float) -> None:
+        self.metrics.gauge(_RECOVERY_METRIC, initial=math.inf).set(value)
+
+    # -- shared recording helpers (simulator + baselines) --------------- #
+    def record_commit(self, rec: CommitRecord) -> None:
+        self.commits.append(rec)
+        self.delay.record(rec.delay)
+
+    def record_scenario_drop(self, *, count_total: bool = False) -> None:
+        """One update lost to a scenario event.  ``ClusterSim`` folds
+        scenario drops into ``drops`` at the end of ``run``; the fair-share
+        baseline has no scheduler drop count and tallies directly
+        (``count_total``)."""
+        self.metrics.counter(_COUNTER_METRICS["scenario_drops"]).inc()
+        if count_total:
+            self.drops += 1
+
+
+def _counter_property(metric: str) -> property:
+    def _get(self) -> int:
+        return int(self.metrics.counter(metric).value)
+
+    def _set(self, value: int) -> None:
+        self.metrics.counter(metric).value = value
+
+    return property(_get, _set)
+
+
+for _attr, _metric in _COUNTER_METRICS.items():
+    setattr(SimResult, _attr, _counter_property(_metric))
 
 
 # --------------------------------------------------------------------------- #
@@ -179,6 +232,7 @@ class ClusterSim:
         on_join: Optional[Callable[[str, float], None]] = None,
         on_replica_commit: Optional[Callable[[int, float], None]] = None,
         on_promote: Optional[Callable[[float, int], None]] = None,
+        hooks: Optional[HookBus] = None,
     ):
         self.n_workers = n_workers
         self.workers = [f"worker{i}" for i in range(n_workers)]
@@ -202,6 +256,11 @@ class ClusterSim:
         self.on_join = on_join
         self.on_replica_commit = on_replica_commit
         self.on_promote = on_promote
+        # telemetry plane (DESIGN.md §10): harness hook bus + its tracer.
+        # Defaults to the shared no-op bus, so the uninstrumented path only
+        # pays do-nothing calls (pinned by the golden-trace test).
+        self.hooks = hooks if hooks is not None else NULL_BUS
+        self.trace = self.hooks.tracer
 
         hosts = list(self.workers) + [self.cfg.server]
         if self.cfg.replica:
@@ -264,6 +323,7 @@ class ClusterSim:
     # ------------------------------------------------------------------ #
     def run(self, *, until_time: float = math.inf,
             until_commits: int = 10 ** 9) -> SimResult:
+        self.hooks.on_run_start(self)
         t = 0.0
         # seed events: every worker starts computing; NIC fluctuations begin.
         for w in self.workers:
@@ -284,6 +344,7 @@ class ClusterSim:
 
         self.result.sim_time = min(t, until_time)
         self.result.drops = self.scheduler.n_dropped + self.result.scenario_drops
+        self.hooks.on_run_end(self, self.result)
         return self.result
 
     # ------------------------------------------------------------------ #
@@ -320,6 +381,9 @@ class ClusterSim:
         else:
             raise TypeError(f"unknown scenario event {ev!r}")
         self.result.scenario_events_applied += 1
+        self.trace.instant(type(ev).__name__, cat="scenario",
+                           track="scenario", ts=t)
+        self.hooks.on_event(self, t, ev)
 
     def _on_scenario(self, t: float, event: ScenarioEvent) -> None:
         self.apply_event(t, event)
@@ -449,6 +513,8 @@ class ClusterSim:
                 u.t_avail = t
                 self._pending.append(u)
                 self.result.reroutes += 1
+                self.trace.instant("reroute", cat="scenario", track="scenario",
+                                   ts=t, args={"uid": uid, "aggregator": host})
 
     def _release_unfinished(self, t: float, tr, *, refund_server: float = 0.0,
                             refund_network: float = 0.0) -> None:
@@ -463,7 +529,7 @@ class ClusterSim:
 
     def _drop_lost(self, uid: int) -> None:
         meta = self._uid_meta.pop(uid, None)
-        self.result.scenario_drops += 1
+        self.result.record_scenario_drop()
         if meta is not None and self.on_drop:
             self.on_drop(meta["worker"], meta["version"])
 
@@ -516,6 +582,8 @@ class ClusterSim:
         self._server_failed = True
         self._fail_time = t
         self.result.server_fails += 1
+        self.trace.instant("server_fail", cat="failover", track=host, ts=t)
+        self.hooks.on_failover(self, t, {"host": host})
         # every server-bound transfer dies with the server
         released_aggregates: set = set()
         for uid, info in list(self._inflight.items()):
@@ -584,6 +652,13 @@ class ClusterSim:
             u.version = min(u.version, self.v_replica)
         for meta in self._uid_meta.values():
             meta["version"] = min(meta["version"], self.v_replica)
+        # the failover span covers dead-primary time: fail -> promotion
+        if self._fail_time is not None:
+            self.trace.span("failover", cat="failover", track=self.cfg.server,
+                            ts=self._fail_time, dur=t - self._fail_time,
+                            args={"gap": gap,
+                                  "regenerated": gap + len(self._regen)})
+        self.hooks.on_replica_promote(self, t, gap)
         if self.on_promote:
             self.on_promote(t, gap)
         for w in sorted(self._stalled):
@@ -654,12 +729,21 @@ class ClusterSim:
             return
         batch, self._pending = self._pending, []
 
+        batch_idx = self.result.scheduler_batches
+        self.hooks.on_batch_start(self, batch_idx,
+                                  {"t": t, "updates": len(batch)})
         import time as _time
         w0 = _time.perf_counter()
         plan = self.scheduler.schedule_batch(batch, self.net_lagged.copy(),
                                              t_now=t)
         self.result.scheduler_wall_time += _time.perf_counter() - w0
         self.result.scheduler_batches += 1
+        # sim-time only in the trace: planner wall-clock goes to metrics, so
+        # the chrome export stays byte-deterministic for the golden test
+        self.trace.instant("plan", cat="scheduler", track="scheduler", ts=t,
+                           args={"batch": batch_idx, "updates": len(batch),
+                                 "planned": len(plan.order),
+                                 "dropped": len(plan.dropped)})
 
         # Enact the plan on the *actual* network: replay the same structure
         # (order, grouping) and take true completion times from it.
@@ -691,6 +775,9 @@ class ClusterSim:
             self._push_event(commit_times[g.uid], "commit", uid=g.uid,
                              epoch=self._commit_epoch.get(g.uid, 0),
                              aggregated=plan.aggregation.assignment.get(g.uid, 0) != 0)
+        self.hooks.on_batch_end(self, batch_idx,
+                                {"t": t, "planned": len(plan.order),
+                                 "dropped": len(plan.dropped)})
 
     def _enact(self, plan: BatchPlan, t_now: float) -> Dict[int, float]:
         """Replay the plan's structure on the actual network -> true times.
@@ -714,6 +801,11 @@ class ClusterSim:
                     self.result.bytes_in_network += g.size
                     self._inflight[g.uid] = {"update": g, "aggregator": None,
                                              "transfer": tr}
+                    self.trace.span(f"{g.worker}->{server}", cat="transfer",
+                                    track=g.worker, ts=tr.t_start,
+                                    dur=tr.t_end - tr.t_start,
+                                    args={"uid": g.uid, "bytes": g.size,
+                                          "kind": "direct"})
             else:
                 t_ready = t_now
                 agg_size = 0.0
@@ -726,6 +818,11 @@ class ClusterSim:
                     self._inflight[g.uid] = {"update": g,
                                              "aggregator": grp.aggregator,
                                              "transfer": tr}
+                    self.trace.span(f"{g.worker}->{grp.aggregator}",
+                                    cat="transfer", track=g.worker,
+                                    ts=tr.t_start, dur=tr.t_end - tr.t_start,
+                                    args={"uid": g.uid, "bytes": g.size,
+                                          "kind": "member"})
                 if grp.members:
                     tr = self.net_actual.reserve(grp.aggregator, server,
                                                  agg_size, t_ready)
@@ -734,6 +831,12 @@ class ClusterSim:
                     for g in grp.members:
                         commit[g.uid] = tr.t_end
                         self._inflight[g.uid]["agg_transfer"] = tr
+                    self.trace.span(
+                        f"{grp.aggregator}->{server} (x{len(grp.members)})",
+                        cat="aggregate", track=grp.aggregator,
+                        ts=tr.t_start, dur=tr.t_end - tr.t_start,
+                        args={"members": sorted(g.uid for g in grp.members),
+                              "bytes": agg_size})
         return commit
 
     def _enact_replica(self, rep, t_now: float) -> float:
@@ -760,6 +863,9 @@ class ClusterSim:
             self._replica_inflight[u.uid] = {"update": u, "transfer": tr}
             self._push_event(tr.t_end, "replica_arrive", uid=u.uid,
                              epoch=self._replica_epoch.get(u.uid, 0))
+            self.trace.span(f"{src}->{replica}", cat="replica", track=src,
+                            ts=tr.t_start, dur=tr.t_end - tr.t_start,
+                            args={"uid": u.uid, "bytes": u.size})
         return t_catchup
 
     def _on_replica_arrive(self, t: float, uid: int, epoch: int = 0) -> None:
@@ -782,6 +888,9 @@ class ClusterSim:
             self._replica_gap.pop(uid, None)
             self.v_replica += 1
             self.result.replica_commits += 1
+            self.trace.instant("replica_commit", cat="replica",
+                               track=self.cfg.replica, ts=t,
+                               args={"uid": uid, "v_replica": self.v_replica})
             if self.on_replica_commit:
                 self.on_replica_commit(uid, t)
 
@@ -796,11 +905,15 @@ class ClusterSim:
                            version_committed=self.v_server,
                            aggregated=aggregated)
         self.v_server += 1
-        self.result.commits.append(rec)
-        self.result.delay.record(rec.delay)
+        self.result.record_commit(rec)
+        self.trace.instant("commit", cat="commit", track=self.cfg.server,
+                           ts=t, args={"uid": uid, "worker": rec.worker,
+                                       "delay": rec.delay,
+                                       "aggregated": aggregated})
         if self._replica_promoted and self._fail_time is not None \
                 and self.result.recovery_time == math.inf:
             self.result.recovery_time = t - self._fail_time
+        self.hooks.on_commit(self, rec)
         if self.on_commit:
             self.on_commit(rec)
         if self.cfg.replica is not None:

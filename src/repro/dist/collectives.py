@@ -94,7 +94,8 @@ def plan_reduce(tree: Params, *, bucket_bytes: int,
 def reduce_flat_buckets(grads: Params, layout: FlatLayout, *,
                         intra_axis: str, inter_axis: Optional[str],
                         compress_inter: bool, mean_over: int,
-                        token: Optional[jax.Array] = None
+                        token: Optional[jax.Array] = None,
+                        tracer: Any = None
                         ) -> Tuple[List[jax.Array], jax.Array]:
     """Pack ``grads`` flat and reduce every bucket in issue order.
 
@@ -102,13 +103,24 @@ def reduce_flat_buckets(grads: Params, layout: FlatLayout, *,
     the chain token.  Threading ``token`` across calls extends the SJF
     barrier chain over multiple gradient chunks, which is how the chunked
     backward keeps all its collectives in one planned issue order.
+
+    ``tracer`` (a ``repro.obs.trace.Tracer``) gets one ``bucket`` span per
+    issued bucket.  This function usually runs under ``jit``, so the span
+    clock is *issue* (trace-construction) wall-clock, not device time —
+    what it shows is the planned SJF issue order and per-bucket payload,
+    which is exactly the schedule MLfabric reasons about.
     """
     leaves = jax.tree_util.tree_leaves(grads)
     flat = pack_leaves(leaves)                       # single fused scatter
     if token is None:
         token = jnp.zeros((), jnp.float32)
+    if tracer is not None:
+        import time as _time
+        t0 = _time.perf_counter()
     reduced: List[jax.Array] = []
     for k in range(len(layout.buckets)):
+        if tracer is not None:
+            t_issue = _time.perf_counter() - t0
         vec = bucket_slice(flat, layout, k)          # zero-copy view
         # Chain each bucket on the previous one's result: the compiler
         # must issue the collectives in the planned (SJF) order.
@@ -120,6 +132,15 @@ def reduce_flat_buckets(grads: Params, layout: FlatLayout, *,
         vec = vec / mean_over
         token = vec[0] * 0.0
         reduced.append(vec)
+        if tracer is not None:
+            b = layout.buckets[k]
+            tracer.span(f"bucket{k} ({len(b.indices)} leaves)", cat="bucket",
+                        track=intra_axis, ts=t_issue,
+                        dur=_time.perf_counter() - t0 - t_issue,
+                        args={"bucket": k, "bytes": b.nbytes,
+                              "leaves": list(b.indices),
+                              "inter": inter_axis or "",
+                              "compressed": bool(compress_inter)})
     return reduced, token
 
 
@@ -140,7 +161,7 @@ def mlfabric_grad_reduce(grads: Params, *, intra_axis: str = "data",
                          bucket_bytes: int = 4 * 2 ** 20,
                          shortest_first: bool = True,
                          compress_inter: bool = False,
-                         mean_over: int = 1) -> Params:
+                         mean_over: int = 1, tracer: Any = None) -> Params:
     """Scheduled hierarchical mean of a gradient pytree.
 
     Numerically equivalent (to f32 reduction tolerance; int8 tolerance
@@ -153,5 +174,5 @@ def mlfabric_grad_reduce(grads: Params, *, intra_axis: str = "data",
                          shortest_first=shortest_first)
     reduced, _ = reduce_flat_buckets(
         grads, layout, intra_axis=intra_axis, inter_axis=inter_axis,
-        compress_inter=compress_inter, mean_over=mean_over)
+        compress_inter=compress_inter, mean_over=mean_over, tracer=tracer)
     return unpack_reduced(reduced, layout, grads)

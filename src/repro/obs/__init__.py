@@ -1,0 +1,36 @@
+"""``repro.obs`` — the unified telemetry plane (DESIGN.md §10).
+
+Four pieces, one contract:
+
+* :mod:`~repro.obs.metrics` — named counters/gauges/histograms/timers
+  with a zero-overhead no-op mode and scoped-name contexts;
+* :mod:`~repro.obs.trace` — span/instant tracer + Chrome ``trace_event``
+  exporter (simulated timelines open in Perfetto);
+* :mod:`~repro.obs.profiler` — wall-clock phase profiler callback, the
+  aggregator HBM roofline model, and planner-latency-vs-U measurement;
+* :mod:`~repro.obs.bench_schema` — versioned, validated BENCH JSON
+  envelope shared by every benchmark artifact.
+
+Everything here is *observation only*: attaching or detaching any of it
+must never change a simulation result, a plan, or a gradient (pinned by
+the golden-trace test).
+"""
+
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      NULL_REGISTRY, Timer)
+from .trace import (NULL_TRACER, NullTracer, TraceEvent, Tracer,
+                    validate_chrome_trace)
+from .profiler import PhaseProfiler, measure_planner_latency
+from .roofline import aggregator_hbm_traffic
+from .bench_schema import (SCHEMA_VERSION, bench_record, git_sha, sanitize,
+                           validate_bench_record, write_bench_record)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Timer", "MetricsRegistry",
+    "NULL_REGISTRY",
+    "Tracer", "NullTracer", "NULL_TRACER", "TraceEvent",
+    "validate_chrome_trace",
+    "PhaseProfiler", "measure_planner_latency", "aggregator_hbm_traffic",
+    "SCHEMA_VERSION", "bench_record", "git_sha", "sanitize",
+    "validate_bench_record", "write_bench_record",
+]

@@ -11,11 +11,12 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
+from ..core.harness import HookBus, make_bus
 from ..core.network import mb
 from ..core.scenario import Scenario
 from ..core.scheduler import SchedulerConfig
@@ -60,7 +61,14 @@ class AsyncTrainer:
                  scenario: Optional[Scenario] = None,
                  compress: bool = False,
                  replicate: bool = False, div_max: float = 2.0,
-                 eval_fn: Optional[Callable] = None, has_aux: bool = False):
+                 eval_fn: Optional[Callable] = None, has_aux: bool = False,
+                 callbacks: Sequence[Any] = (),
+                 hooks: Optional[HookBus] = None):
+        # the shared trainer-hook harness (DESIGN.md §10): lifecycle hooks
+        # fire from the event simulator driving this trainer, so the same
+        # TrainerCallback observes MLfabric-A, pod-async, sync, SSP and
+        # elastic sessions
+        self.hooks = hooks if hooks is not None else make_bus(callbacks)
         self.server = ParameterServer(init_params, gamma=gamma)
         # ``replicate`` runs a real-tensor ReplicaServer (§3.3): the
         # scheduler plans bounded-divergence replica copies on spare
@@ -104,7 +112,8 @@ class AsyncTrainer:
             on_compute=self._on_compute, on_commit=self._on_commit,
             on_drop=self._on_drop, on_join=self._on_join,
             on_replica_commit=self._on_replica_commit if replicate else None,
-            on_promote=self._on_promote if replicate else None)
+            on_promote=self._on_promote if replicate else None,
+            hooks=self.hooks)
         self.result = AsyncTrainResult()
 
     # -- dynamic membership (scenario WorkerJoin events) -------------------- #

@@ -48,7 +48,8 @@ class PodAsyncTrainer(AsyncTrainer):
                  bandwidth: BandwidthModel = N_STATIC,
                  compress: bool = False, seed: int = 0,
                  scenario=None, replicate: bool = False, div_max: float = 2.0,
-                 eval_fn: Optional[Callable] = None, has_aux: bool = False):
+                 eval_fn: Optional[Callable] = None, has_aux: bool = False,
+                 callbacks=(), hooks=None):
         self.local_steps = local_steps
         self.inner_lr = inner_lr
         self.compression_ratio = 4.0 if compress else 1.0
@@ -63,7 +64,8 @@ class PodAsyncTrainer(AsyncTrainer):
                          compute_time=compute_time, straggler=straggler,
                          bandwidth=bandwidth, aggregators=0, seed=seed,
                          scenario=scenario, replicate=replicate,
-                         div_max=div_max, eval_fn=eval_fn, has_aux=has_aux)
+                         div_max=div_max, eval_fn=eval_fn, has_aux=has_aux,
+                         callbacks=callbacks, hooks=hooks)
         # after super().__init__: the pod round-trips its *delta* itself in
         # _on_compute, so base-class compress must stay off (the wire
         # already carries the compressed size via update_size above)

@@ -17,6 +17,7 @@ import random
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from ..core.harness import HookBus, StepLoop, make_bus
 from ..core.network import NetworkState, gbps, mb
 from ..core.ordering import Update
 from ..core.scheduler import MLfabricScheduler, SchedulerConfig
@@ -43,7 +44,9 @@ class StaleSyncSim:
                  straggler: StragglerModel = C1,
                  bandwidth: BandwidthModel = N_STATIC,
                  default_bw: float = gbps(10), seed: int = 0,
-                 aggregate: bool = False, aggregators: int = 2):
+                 aggregate: bool = False, aggregators: int = 2,
+                 callbacks=(), hooks: Optional[HookBus] = None):
+        self.hooks = hooks if hooks is not None else make_bus(callbacks)
         self.n = n_workers
         self.k = k
         self.compute = compute_time
@@ -58,8 +61,9 @@ class StaleSyncSim:
         # finish[w][t] = time worker w finishes iteration t
         finish = [[0.0] * (n_iterations + 1) for _ in range(self.n)]
         halt = 0.0
-        hosts = [f"w{i}" for i in range(self.n)] + ["server"]
-        for t in range(1, n_iterations + 1):
+
+        def _iteration(idx: int, t: int) -> Dict[str, float]:
+            nonlocal halt
             for w in range(self.n):
                 # SSP barrier: wait for everyone's iteration t-K
                 gate = 0.0
@@ -75,6 +79,10 @@ class StaleSyncSim:
                     # bandwidth across the group (best case 1/groups)
                     comm = comm / max(min(self.aggregators + 1, self.n), 1)
                 finish[w][t] = start + comp + comm
+            return {"halt_time": halt}
+
+        StepLoop(_iteration, bus=self.hooks, source=self).run(
+            range(1, n_iterations + 1))
         sim_time = max(finish[w][n_iterations] for w in range(self.n))
         return SSPResult(sim_time=sim_time,
                          iterations_done={f"w{i}": n_iterations

@@ -17,6 +17,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..core.harness import HookBus, StepLoop, make_bus
 from ..core.network import NetworkState, gbps, mb
 from ..core.ordering import Update
 from ..core.scheduler import MLfabricScheduler, SchedulerConfig
@@ -44,7 +45,9 @@ class SyncTrainer:
                  straggler: StragglerModel = C1,
                  bandwidth: BandwidthModel = N_STATIC,
                  default_bw: float = gbps(10), aggregators: int = 2,
-                 seed: int = 0, has_aux: bool = False):
+                 seed: int = 0, has_aux: bool = False,
+                 callbacks=(), hooks: Optional[HookBus] = None):
+        self.hooks = hooks if hooks is not None else make_bus(callbacks)
         self.server = ParameterServer(init_params, gamma=gamma)
         self.n_workers = n_workers
         self.base_lr = base_lr
@@ -114,11 +117,18 @@ class SyncTrainer:
                                    n_direct=plan.aggregation.n_direct,
                                    n_aggregated=n_agg)
         self.stats.append(stats)
+        # sync mode applies ONE combined update per iteration: that is the
+        # commit this driver reports to the harness
+        self.hooks.on_commit(self, stats)
         return plan.makespan, stats
 
     def run(self, n_iterations: int) -> List[SyncIterationStats]:
-        for _ in range(n_iterations):
-            self.step()
+        def _step(i: int, _item) -> Dict[str, float]:
+            makespan, stats = self.step()
+            return {"makespan": makespan, "compute_time": stats.compute_time,
+                    "comm_time": stats.comm_time}
+
+        StepLoop(_step, bus=self.hooks, source=self).run(range(n_iterations))
         return self.stats
 
 

@@ -1,0 +1,82 @@
+"""Golden-file regression for the Chrome ``trace_event`` exporter.
+
+Runs the SAME pinned configuration as tests/test_golden_trace.py with a
+real tracer on the hook bus and compares the serialized Chrome JSON
+byte-for-byte against a checked-in golden file.  This pins three things
+at once:
+
+* the exporter's output format (event fields, lane packing, metadata,
+  µs rounding) — a rendering change shows up as a diff;
+* determinism — the trace contains only simulated time, never wall-clock,
+  so a seeded run serializes identically everywhere;
+* non-perturbation — the run's commit trace must still match the
+  ``cluster_sim_trace.txt`` golden while the tracer is attached, i.e.
+  telemetry observes the simulation without changing it.
+
+To regenerate after an *intentional* exporter/semantics change:
+
+    PYTHONPATH=src python tests/test_chrome_trace_golden.py --regen
+
+and commit the JSON diff alongside the change.
+"""
+
+import json
+import os
+import sys
+
+from repro.core.harness import HookBus
+from repro.obs import MetricsRegistry, Tracer, validate_chrome_trace
+
+from test_golden_trace import GOLDEN_PATH as TXT_GOLDEN_PATH
+from test_golden_trace import golden_run, render_trace
+
+GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "golden", "cluster_sim_chrome_trace.json")
+
+
+def traced_golden_run():
+    tracer = Tracer(process_name="mlfabric-sim")
+    result = golden_run(HookBus(metrics=MetricsRegistry(), tracer=tracer))
+    return result, tracer
+
+
+def render_chrome(tracer: Tracer) -> str:
+    # exactly Tracer.write_chrome's serialization
+    return json.dumps(tracer.to_chrome(), indent=1, sort_keys=True) + "\n"
+
+
+def test_chrome_trace_matches_golden():
+    result, tracer = traced_golden_run()
+    actual = render_chrome(tracer)
+    with open(GOLDEN_PATH) as f:
+        expected = f.read()
+    assert actual == expected, (
+        "Chrome trace export changed — if intentional, regenerate with "
+        "`python tests/test_chrome_trace_golden.py --regen` and commit "
+        "the JSON diff alongside the change")
+    # attaching the tracer must not perturb the simulation itself
+    with open(TXT_GOLDEN_PATH) as f:
+        assert render_trace(result) == f.read()
+
+
+def test_golden_chrome_trace_is_valid_and_complete():
+    with open(GOLDEN_PATH) as f:
+        chrome = json.load(f)
+    assert validate_chrome_trace(chrome) == []
+    cats = {e.get("cat") for e in chrome["traceEvents"]}
+    # the pinned run exercises transfers, aggregation, commits, the
+    # scheduler and scenario churn — all must appear in the export
+    for needed in ("transfer", "aggregate", "commit", "scheduler",
+                   "scenario"):
+        assert needed in cats, f"golden trace lost its {needed} spans"
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        _, tracer = traced_golden_run()
+        os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+        with open(GOLDEN_PATH, "w") as f:
+            f.write(render_chrome(tracer))
+        print(f"wrote {GOLDEN_PATH}")
+    else:
+        print(__doc__)

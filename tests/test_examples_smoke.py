@@ -1,0 +1,54 @@
+"""Smoke-run every ``examples/*.py`` in fast mode (ISSUE 6 satellite).
+
+Each example is a user-facing entry point; an import error or crashed
+demo is a release bug even when the library tests are green.  Each runs
+as a subprocess (the same way a user runs it) with its cheapest flags.
+
+The parametrization enumerates ``examples/*.py`` from disk, so adding an
+example without a smoke entry fails the completeness check below.
+"""
+
+import glob
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# example file -> cheapest-flags argv (fast mode)
+FAST_ARGS = {
+    "quickstart.py": [],
+    "dynamic_cluster.py": [],
+    "bounded_replication.py": [],
+    "failover.py": [],
+    "async_vs_sync.py": ["--quick"],
+    "lda_topic_model.py": ["--quick"],
+    "serve_decode.py": ["--batch", "1", "--prompt-len", "8",
+                        "--new-tokens", "4"],
+}
+
+
+def test_every_example_has_a_smoke_entry():
+    on_disk = sorted(os.path.basename(p) for p in
+                     glob.glob(os.path.join(REPO, "examples", "*.py")))
+    assert on_disk == sorted(FAST_ARGS), (
+        "examples/ and FAST_ARGS disagree — add the new example's fast "
+        "flags to tests/test_examples_smoke.py")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("example", sorted(FAST_ARGS))
+def test_example_runs_clean(example):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "examples", example)]
+        + FAST_ARGS[example],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, (
+        f"{example} exited {proc.returncode}\n--- stdout ---\n"
+        f"{proc.stdout[-2000:]}\n--- stderr ---\n{proc.stderr[-2000:]}")
+    assert proc.stdout.strip(), f"{example} produced no output"

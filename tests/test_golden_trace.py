@@ -28,8 +28,13 @@ GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            "golden", "cluster_sim_trace.txt")
 
 
-def golden_run():
-    """The pinned configuration: every simulator feature on one run."""
+def golden_run(hooks=None):
+    """The pinned configuration: every simulator feature on one run.
+
+    ``hooks`` (a ``repro.core.harness.HookBus``) attaches telemetry to the
+    same pinned run — tests/test_chrome_trace_golden.py pins the Chrome
+    trace export of this exact configuration, and the test below doubles
+    as proof that an attached tracer cannot perturb the simulation."""
     scenario = Scenario(
         [WorkerLeave(time=2.0, worker="worker5"),
          AggregatorFail(time=2.5, host="worker0"),
@@ -44,7 +49,7 @@ def golden_run():
     # drops, joins and leaves are all pinned non-trivially below)
     sim = ClusterSim(6, cfg, update_size=mb(100), compute_time=0.05,
                      straggler=C2, bandwidth=N2, monitor_lag=0.2, seed=42,
-                     default_bw=gbps(1.5), scenario=scenario)
+                     default_bw=gbps(1.5), scenario=scenario, hooks=hooks)
     return sim.run(until_time=8.0)
 
 

@@ -1,0 +1,227 @@
+"""Trainer-hook harness tests (``repro.core.harness``, DESIGN.md §10):
+HookBus dispatch semantics, the NULL_BUS fast path, StepLoop, the
+SimResult metrics-backed accessors, and end-to-end hook delivery from
+every trainer that runs on the shared harness."""
+
+from typing import Any, Dict, List
+
+from repro.core.harness import (HOOKS, NULL_BUS, HookBus, StepLoop,
+                                TrainerCallback, make_bus)
+from repro.core.network import mb
+from repro.core.scheduler import SchedulerConfig
+from repro.core.simulator import ClusterSim, SimResult, StragglerModel
+from repro.obs import MetricsRegistry, Tracer
+from repro.scenarios import server_failover
+
+
+class Recorder(TrainerCallback):
+    """Appends ``(hook, args...)`` tuples for assertion."""
+
+    def __init__(self):
+        self.calls: List[tuple] = []
+
+    def __getattribute__(self, name):
+        if name in HOOKS:
+            calls = object.__getattribute__(self, "calls")
+            return lambda *a, **k: calls.append((name,) + a)
+        return object.__getattribute__(self, name)
+
+    def count(self, hook: str) -> int:
+        return sum(1 for c in self.calls if c[0] == hook)
+
+
+# --------------------------------------------------------------------------- #
+# bus semantics
+# --------------------------------------------------------------------------- #
+def test_bus_dispatches_to_all_callbacks_in_order():
+    a, b = Recorder(), Recorder()
+    bus = HookBus([a])
+    bus.add(b)
+    bus.on_commit("src", {"uid": 1})
+    assert a.calls == [("on_commit", "src", {"uid": 1})]
+    assert b.calls == a.calls
+
+
+def test_bus_skips_missing_hooks_duck_typing():
+    class OnlyCommits:
+        def __init__(self):
+            self.n = 0
+
+        def on_commit(self, source, record):
+            self.n += 1
+
+    cb = OnlyCommits()
+    bus = HookBus([cb])
+    bus.on_run_start("src")          # no such method: skipped, no raise
+    bus.on_commit("src", None)
+    assert cb.n == 1
+
+
+def test_bus_counts_fires_in_registry():
+    reg = MetricsRegistry()
+    bus = HookBus(metrics=reg)
+    bus.on_commit("src", None)
+    bus.on_commit("src", None)
+    bus.on_failover("src", 1.0)
+    snap = reg.snapshot()
+    assert snap["hooks/on_commit"] == 2
+    assert snap["hooks/on_failover"] == 1
+
+
+def test_make_bus_returns_shared_null_bus_when_unconfigured():
+    assert make_bus() is NULL_BUS
+    assert make_bus([Recorder()]) is not NULL_BUS
+    assert make_bus(metrics=MetricsRegistry()) is not NULL_BUS
+    assert not NULL_BUS.metrics.enabled
+    assert not NULL_BUS.tracer.enabled
+
+
+def test_trainer_callback_base_is_inert():
+    bus = HookBus([TrainerCallback()])
+    bus.on_run_start("src")            # every hook dispatches cleanly
+    bus.on_batch_start("src", 0)
+    bus.on_batch_end("src", 0, {})
+    bus.on_commit("src", None)
+    bus.on_event("src", 0.0, None)
+    bus.on_failover("src", 0.0)
+    bus.on_replica_promote("src", 0.0, 1)
+    bus.on_run_end("src")
+
+
+# --------------------------------------------------------------------------- #
+# StepLoop
+# --------------------------------------------------------------------------- #
+def test_step_loop_hooks_and_return_wrapping():
+    rec = Recorder()
+    loop = StepLoop(lambda i, item: {"loss": item * 1.0},
+                    bus=HookBus([rec]), source="trainer")
+    out = loop.run([10, 20])
+    assert out == {"loss": 20.0}
+    assert rec.count("on_run_start") == 1 and rec.count("on_run_end") == 1
+    assert rec.count("on_batch_start") == 2
+    # dict results pass through unwrapped
+    assert ("on_batch_end", "trainer", 1, {"loss": 20.0}) in rec.calls
+
+
+def test_step_loop_wraps_non_dict_and_persists_counter():
+    rec = Recorder()
+    loop = StepLoop(lambda i, item: item, bus=HookBus([rec]), source="t")
+    loop.run([5], fire_run_hooks=False)
+    loop.run([6], fire_run_hooks=False)     # counter continues across runs
+    assert loop.steps_done == 2
+    assert ("on_batch_end", "t", 0, {"result": 5}) in rec.calls
+    assert ("on_batch_end", "t", 1, {"result": 6}) in rec.calls
+    assert rec.count("on_run_start") == 0
+
+
+# --------------------------------------------------------------------------- #
+# SimResult: registry-backed counters stay backward compatible
+# --------------------------------------------------------------------------- #
+def test_sim_result_counters_are_registry_backed():
+    res = SimResult()
+    assert res.promotions == 0
+    res.promotions += 1                      # property setter path
+    res.server_fails = 3
+    assert res.promotions == 1 and res.server_fails == 3
+    snap = res.metrics.snapshot()
+    assert snap["failover/promotions"] == 1
+    assert snap["failover/server_fails"] == 3
+    res.recovery_time = 2.5                  # gauge-backed property
+    assert res.recovery_time == 2.5
+
+
+# --------------------------------------------------------------------------- #
+# end-to-end: the simulator drives the harness
+# --------------------------------------------------------------------------- #
+def _failover_sim(hooks):
+    cfg = SchedulerConfig(server="server", aggregators=["worker0"],
+                          tau_max=30, mode="async", replica="replica",
+                          replica_aggregators=(), div_max=4.0, gamma=0.9)
+    return ClusterSim(4, cfg, update_size=mb(50), compute_time=0.05,
+                      straggler=StragglerModel(0, 1), seed=7,
+                      scenario=server_failover(fail_at=2.0), hooks=hooks)
+
+
+def test_cluster_sim_fires_hooks_through_failover():
+    rec = Recorder()
+    reg = MetricsRegistry()
+    res = _failover_sim(HookBus([rec], metrics=reg)).run(until_time=5.0)
+    assert rec.count("on_run_start") == 1 and rec.count("on_run_end") == 1
+    assert rec.count("on_commit") == res.n_commits > 0
+    assert rec.count("on_failover") == 1
+    assert rec.count("on_replica_promote") == 1
+    assert rec.count("on_batch_start") == rec.count("on_batch_end") > 0
+    # the run_end payload is the SimResult itself
+    assert any(c[0] == "on_run_end" and c[2] is res for c in rec.calls)
+    assert reg.snapshot()["hooks/on_commit"] == res.n_commits
+
+
+def test_cluster_sim_traces_required_categories():
+    tracer = Tracer()
+    _failover_sim(HookBus(tracer=tracer)).run(until_time=5.0)
+    cats = tracer.categories()
+    for needed in ("transfer", "commit", "failover", "replica"):
+        assert needed in cats, f"missing {needed} spans in {cats}"
+    fo = [e for e in tracer.by_cat("failover") if e.dur is not None]
+    assert fo and fo[0].args["gap"] >= 0   # promotion span carries the gap
+
+
+def test_hooked_run_matches_unhooked_run():
+    """The acceptance bar: attaching telemetry must not perturb the sim."""
+    plain = _failover_sim(None).run(until_time=5.0)
+    hooked = _failover_sim(
+        HookBus([Recorder()], metrics=MetricsRegistry(),
+                tracer=Tracer())).run(until_time=5.0)
+    assert [(c.uid, c.time) for c in plain.commits] == \
+        [(c.uid, c.time) for c in hooked.commits]
+    assert plain.sim_time == hooked.sim_time
+    assert plain.recovery_time == hooked.recovery_time
+
+
+# --------------------------------------------------------------------------- #
+# end-to-end: loop trainers on the shared StepLoop
+# --------------------------------------------------------------------------- #
+def _quad_loss(params, batch):
+    import jax.numpy as jnp
+    return jnp.sum(jnp.square(params["w"] - batch["target"]))
+
+
+def _data_fn(worker, t):
+    import jax.numpy as jnp
+    return {"target": jnp.zeros(2)}
+
+
+def test_sync_trainer_on_harness():
+    import jax.numpy as jnp
+    from repro.ps.sync_trainer import SyncTrainer
+
+    rec = Recorder()
+    tr = SyncTrainer({"w": jnp.ones(2)}, _quad_loss, _data_fn,
+                     n_workers=2, update_size=mb(10), callbacks=[rec])
+    tr.run(3)
+    assert rec.count("on_batch_start") == 3
+    assert rec.count("on_commit") == 3       # one commit per sync round
+    assert rec.count("on_run_start") == 1
+
+
+def test_stale_sync_on_harness():
+    from repro.ps.stale_sync import StaleSyncSim
+
+    rec = Recorder()
+    StaleSyncSim(4, callbacks=[rec]).run(5)
+    assert rec.count("on_batch_start") == 5
+    assert rec.count("on_run_end") == 1
+
+
+def test_async_trainer_forwards_hooks_to_sim():
+    import jax.numpy as jnp
+    from repro.ps.async_trainer import AsyncTrainer
+
+    rec = Recorder()
+    tr = AsyncTrainer({"w": jnp.ones(2)}, _quad_loss, _data_fn,
+                      n_workers=2, tau_max=8, compute_time=0.05,
+                      update_size=mb(5), straggler=StragglerModel(0, 1),
+                      callbacks=[rec])
+    tr.run(until_commits=4)
+    assert rec.count("on_commit") >= 4
+    assert rec.count("on_run_start") >= 1

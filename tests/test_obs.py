@@ -1,0 +1,218 @@
+"""Unit tests for the telemetry plane (``repro.obs``, DESIGN.md §10):
+metrics registry semantics (including the zero-overhead disabled mode),
+tracer recording + Chrome export structure, the BENCH schema envelope,
+the phase profiler, and the planner-latency probe."""
+
+import json
+import math
+import os
+
+import pytest
+
+from repro.obs import (NULL_REGISTRY, NULL_TRACER, MetricsRegistry,
+                       PhaseProfiler, Tracer, aggregator_hbm_traffic,
+                       bench_record, measure_planner_latency,
+                       validate_chrome_trace, write_bench_record)
+from repro.obs.bench_schema import SCHEMA_VERSION, validate_bench_record
+
+
+# --------------------------------------------------------------------------- #
+# metrics registry
+# --------------------------------------------------------------------------- #
+def test_counter_gauge_histogram_timer_roundtrip():
+    reg = MetricsRegistry()
+    reg.counter("commits").inc()
+    reg.counter("commits").inc(4)
+    reg.gauge("divergence").set(2.5)
+    for v in (1.0, 3.0):
+        reg.histogram("delay").observe(v)
+    with reg.timer("plan").time():
+        pass
+    snap = reg.snapshot()
+    assert snap["commits"] == 5
+    assert snap["divergence"] == 2.5
+    assert snap["delay"]["count"] == 2 and snap["delay"]["mean"] == 2.0
+    assert snap["delay"]["min"] == 1.0 and snap["delay"]["max"] == 3.0
+    assert snap["plan"]["count"] == 1 and snap["plan"]["total"] >= 0.0
+
+
+def test_registry_is_idempotent_per_name():
+    reg = MetricsRegistry()
+    assert reg.counter("x") is reg.counter("x")
+    reg.counter("x").inc()
+    assert reg.counter("x").value == 1
+    assert "x" in reg and "y" not in reg
+
+
+def test_counter_value_is_settable():
+    # SimResult's backward-compatible property setters assign .value
+    reg = MetricsRegistry()
+    c = reg.counter("drops")
+    c.value = 7
+    c.inc()
+    assert reg.snapshot()["drops"] == 8
+
+
+def test_scope_prefixes_names():
+    reg = MetricsRegistry()
+    with reg.scope("failover"):
+        reg.counter("promotions").inc()
+        with reg.scope("inner"):
+            reg.counter("deep").inc()
+    reg.counter("top").inc()
+    names = reg.names()
+    assert "failover/promotions" in names
+    assert "failover/inner/deep" in names
+    assert "top" in names
+
+
+def test_disabled_registry_is_inert_and_shared():
+    reg = MetricsRegistry.disabled()
+    c = reg.counter("anything")
+    c.inc(100)
+    reg.gauge("g").set(5.0)
+    with reg.timer("t").time():
+        pass
+    assert reg.snapshot() == {}
+    assert reg.names() == []
+    # all disabled instruments are the same null singleton: no allocation
+    # on the hot path, the whole point of no-op mode
+    assert reg.counter("a") is reg.counter("b") is c
+    assert NULL_REGISTRY.counter("x") is c
+
+
+# --------------------------------------------------------------------------- #
+# tracer + Chrome export
+# --------------------------------------------------------------------------- #
+def _small_trace() -> Tracer:
+    tr = Tracer(process_name="test")
+    tr.span("w0->s", cat="transfer", track="w0", ts=0.0, dur=0.5,
+            args={"bytes": 100})
+    tr.span("w0->s", cat="transfer", track="w0", ts=0.25, dur=0.5)
+    tr.instant("commit", cat="commit", track="s", ts=0.75)
+    return tr
+
+
+def test_chrome_export_structure_and_validation():
+    chrome = _small_trace().to_chrome()
+    assert validate_chrome_trace(chrome) == []
+    evs = chrome["traceEvents"]
+    complete = [e for e in evs if e["ph"] == "X"]
+    instants = [e for e in evs if e["ph"] == "i"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert len(complete) == 2 and len(instants) == 1
+    # seconds -> microseconds
+    assert complete[0]["ts"] == 0.0 and complete[0]["dur"] == 0.5e6
+    assert complete[0]["args"]["bytes"] == 100
+    # process_name + per-lane thread_name/thread_sort_index metadata
+    assert any(m["name"] == "process_name" for m in meta)
+    assert any(m["name"] == "thread_name" for m in meta)
+
+
+def test_overlapping_spans_get_separate_lanes():
+    chrome = _small_trace().to_chrome()
+    complete = [e for e in chrome["traceEvents"] if e["ph"] == "X"]
+    # both spans live on track "w0" but overlap -> distinct tids
+    assert complete[0]["tid"] != complete[1]["tid"]
+
+
+def test_validate_chrome_trace_catches_malformed():
+    assert validate_chrome_trace([]) != []
+    assert validate_chrome_trace({"traceEvents": 3}) != []
+    bad = {"traceEvents": [{"ph": "X", "pid": 0, "tid": 0, "ts": 1.0,
+                            "name": "x"}]}       # complete event, no dur
+    assert any("dur" in p for p in validate_chrome_trace(bad))
+
+
+def test_write_chrome_roundtrips(tmp_path):
+    path = str(tmp_path / "trace.json")
+    _small_trace().write_chrome(path)
+    with open(path) as f:
+        loaded = json.load(f)
+    assert validate_chrome_trace(loaded) == []
+
+
+def test_null_tracer_records_nothing():
+    NULL_TRACER.span("x", cat="c", track="t", ts=0.0, dur=1.0)
+    NULL_TRACER.instant("y", cat="c", track="t", ts=0.0)
+    assert NULL_TRACER.events == []
+    assert not NULL_TRACER.enabled
+
+
+def test_tracer_queries():
+    tr = _small_trace()
+    assert tr.categories() == ["commit", "transfer"]
+    assert len(tr.by_cat("transfer")) == 2
+
+
+# --------------------------------------------------------------------------- #
+# bench schema
+# --------------------------------------------------------------------------- #
+def test_bench_record_schema_and_sanitization():
+    rec = bench_record("bench_x", config={"n": 4},
+                       results={"recovery": math.inf,
+                                "nested": {"nan": math.nan, "ok": 1.5}})
+    assert validate_bench_record(rec) == []
+    assert rec["schema_version"] == SCHEMA_VERSION
+    assert rec["results"]["recovery"] is None
+    assert rec["results"]["nested"]["nan"] is None
+    assert rec["results"]["nested"]["ok"] == 1.5
+    # record is pure JSON
+    json.dumps(rec)
+
+
+def test_validate_bench_record_rejects_bad():
+    assert validate_bench_record({}) != []
+    rec = bench_record("x", config={}, results={})
+    rec["schema_version"] = "1"          # wrong type
+    assert validate_bench_record(rec) != []
+
+
+def test_write_bench_record_writes_canonical_and_timestamped(tmp_path):
+    rec = bench_record("bench_y", config={}, results={"v": 1},
+                       created="2026-01-01T00:00:00Z")
+    canonical = str(tmp_path / "BENCH_Y.json")
+    paths = write_bench_record(rec, canonical,
+                               runs_dir=str(tmp_path / "runs"))
+    assert len(paths) == 2 and paths[0] == canonical
+    for p in paths:
+        with open(p) as f:
+            assert validate_bench_record(json.load(f)) == []
+    assert os.path.dirname(paths[1]) == str(tmp_path / "runs")
+
+
+# --------------------------------------------------------------------------- #
+# profiler + roofline + planner probe
+# --------------------------------------------------------------------------- #
+def test_phase_profiler_probes_and_hooks():
+    prof = PhaseProfiler()
+    with prof.phase("plan"):
+        pass
+    prof.on_batch_start(None, 0)
+    prof.on_batch_end(None, 0)
+    prof.on_commit(None, object())
+    prof.on_failover(None, 1.0)
+    summary = prof.summary(roofline_n=8, roofline_d=4096)
+    m = summary["metrics"]
+    assert m["phase/plan"]["count"] == 1
+    assert m["phase/batch"]["count"] == 1
+    assert m["commits"] == 1 and m["failovers"] == 1
+    assert summary["roofline"]["ratio"] > 1.0
+
+
+def test_roofline_model_monotone_in_fanin():
+    r4 = aggregator_hbm_traffic(4, 65536)
+    r16 = aggregator_hbm_traffic(16, 65536)
+    # fused saves more as fan-in grows (N f32 round-trips avoided)
+    assert r16["ratio"] > r4["ratio"] > 1.0
+
+
+@pytest.mark.parametrize("planner", ["incremental"])
+def test_measure_planner_latency_rows(planner):
+    rows = measure_planner_latency((4, 8), n_aggregators=2, repeats=1,
+                                   planner=planner)
+    assert [r["u"] for r in rows] == [4.0, 8.0]
+    for r in rows:
+        assert r["latency_s"] > 0.0
+        assert r["latency_per_u_us"] == pytest.approx(
+            r["latency_s"] / r["u"] * 1e6)
