@@ -1,0 +1,73 @@
+"""CI gate: fail when the planner-latency-vs-U curve regresses.
+
+Compares a freshly produced BENCH_OBS.json (written by
+``python -m benchmarks.run --fast`` earlier in the job) against the record
+committed at the repo root.  For every batch size U present in *both*
+records, the fresh latency must stay under ``--threshold`` (default 1.5x)
+of the committed one; any single U over the bar fails the job.  Speedups
+are reported but never block — commit a regenerated BENCH_OBS.json
+alongside planner changes to move the baseline.
+
+    PYTHONPATH=src python benchmarks/check_planner_regression.py \
+        --fresh BENCH_OBS.json --baseline ci/BENCH_OBS.baseline.json
+
+(In CI the committed copy is stashed before the bench run overwrites it.)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_curve(path: str) -> dict:
+    with open(path) as f:
+        rec = json.load(f)
+    rows = rec.get("results", {}).get("planner_latency_vs_u", [])
+    if not rows:
+        raise SystemExit(f"{path}: no planner_latency_vs_u rows")
+    return {int(r["u"]): float(r["latency_s"]) for r in rows}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", default="BENCH_OBS.json",
+                    help="record produced by this CI run")
+    ap.add_argument("--baseline", required=True,
+                    help="committed record to gate against")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="max allowed latency ratio at any U")
+    args = ap.parse_args(argv)
+
+    fresh, base = load_curve(args.fresh), load_curve(args.baseline)
+    shared = sorted(set(fresh) & set(base))
+    if not shared:
+        print("no common U values between fresh and baseline", file=sys.stderr)
+        return 1
+
+    failed = []
+    for u in shared:
+        ratio = fresh[u] / base[u] if base[u] > 0 else float("inf")
+        status = "FAIL" if ratio > args.threshold else "ok"
+        print(f"U={u:<5d} baseline={base[u]*1e3:8.1f}ms "
+              f"fresh={fresh[u]*1e3:8.1f}ms ratio={ratio:5.2f}x  {status}")
+        if ratio > args.threshold:
+            failed.append(u)
+
+    missing = sorted(set(base) - set(fresh))
+    if missing:
+        # a silently shrunk curve must not pass as "no regression"
+        print(f"FAIL: baseline U values missing from fresh record: {missing}",
+              file=sys.stderr)
+        return 1
+    if failed:
+        print(f"FAIL: planner latency regressed >" +
+              f"{args.threshold:g}x at U={failed}", file=sys.stderr)
+        return 1
+    print("planner latency gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

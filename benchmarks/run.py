@@ -531,18 +531,149 @@ def bench_kernel_flash_attention():
 
 
 def bench_planner_latency_vs_u(out: dict):
-    """ROADMAP item 2 / DESIGN.md §10: incremental-planner latency as the
-    batch size U grows.  The planner's cost must grow ~O(changes), so
-    ``latency_per_u_us`` should stay roughly flat — a super-linear bend in
-    this curve is the regression alarm the fast bench exists to ring."""
+    """ROADMAP item 2 / DESIGN.md §§10-11: from-scratch Alg. 3 latency as
+    the batch size U grows, now out to U=4096.  This is the *full-replan*
+    baseline the event-driven repair path (``bench_repair_latency``)
+    avoids: the curve is super-linear, which is precisely why per-event
+    replanning does not scale and repair exists.  The regression gate
+    (``benchmarks/check_planner_regression.py``) fails CI when any U slows
+    down >1.5x against the committed record."""
     t0 = time.perf_counter()
     rows = measure_planner_latency((8, 16, 32, 64), n_aggregators=8,
                                    planner="incremental", repeats=3)
+    # large-U tail: one pass is seconds, best-of-1/2 keeps the bench fast
+    rows += measure_planner_latency((256,), n_aggregators=8,
+                                    planner="incremental", repeats=2)
+    rows += measure_planner_latency((1024, 4096), n_aggregators=8,
+                                    planner="incremental", repeats=1)
     dt = time.perf_counter() - t0
     out["planner_latency_vs_u"] = rows
     record("planner_latency_vs_u", dt,
            ";".join(f"U{int(r['u'])}={r['latency_s']*1e3:.1f}ms"
                     f"({r['latency_per_u_us']:.0f}us/u)" for r in rows))
+
+
+def bench_repair_latency(out: dict):
+    """Tentpole evidence: after a topology/rate event the planner pays
+    ~O(changes), not O(U).  4096-host cluster, one planned 64-update
+    batch, then a stream of 200 events (bandwidth jitter, joins, leaves,
+    spread over the whole cluster).  ``repair_aggregation`` answers each
+    event with the O(|changes|) footprint check — keeping the plan (and
+    every reservation) untouched when the event is invisible to the batch
+    — while the baseline re-runs Alg. 3 from scratch every time."""
+    import random as _random
+    from repro.core.repair import repair_aggregation
+
+    n_hosts, n_batch, n_aggs, n_events = 4096, 64, 8, 200
+    rng = _random.Random(0)
+    hosts = [f"w{i}" for i in range(n_hosts)]
+    aggs = [f"a{i}" for i in range(n_aggs)]
+    net = NetworkState(hosts + aggs + ["s"], gbps(10))
+    ups = [Update(uid=i, worker=f"w{i}", size=mb(100), version=0,
+                  t_avail=rng.uniform(0, 0.05)) for i in range(n_batch)]
+    events = []
+    for i in range(n_events):
+        r = rng.random()
+        if r < 0.8:                       # NIC rate change somewhere
+            events.append(("bw", rng.choice(hosts)))
+        elif r < 0.9:                     # churn: a non-member leaves
+            events.append(("leave", f"w{rng.randrange(n_batch, n_hosts)}"))
+        else:
+            events.append(("join", f"j{i}"))
+
+    def apply_event(network, ev):
+        kind, h = ev
+        if kind == "bw":
+            if h in network.up:
+                network.set_bandwidth(h, 0.0,
+                                      up=gbps(rng.choice([1, 5, 10])))
+            return {h}, set()
+        if kind == "leave":
+            if h in network.up:
+                network.remove_host(h)
+            return set(), {h}
+        network.add_host(h, gbps(10))
+        return {h}, set()
+
+    # --- repair path: footprint check per event ------------------------ #
+    rng = _random.Random(1)
+    net_r = net.copy()
+    order = list(ups)
+    prev = aggregate_updates(order, net_r, "s", aggs, objective="avg_commit")
+    kept = replanned = 0
+    t0 = time.perf_counter()
+    for ev in events:
+        changed, departed = apply_event(net_r, ev)
+        rep = repair_aggregation(prev, order, net_r, "s", aggs,
+                                 objective="avg_commit", changed=changed,
+                                 departed=departed)
+        order = [u for u in order if u.worker not in departed]
+        prev = rep.plan
+        kept += rep.kept
+        replanned += rep.replanned
+    repair_total = time.perf_counter() - t0
+
+    # --- baseline: from-scratch replan per event ----------------------- #
+    rng = _random.Random(1)
+    net_f = net.copy()
+    order = list(ups)
+    t0 = time.perf_counter()
+    for ev in events:
+        _, departed = apply_event(net_f, ev)
+        order = [u for u in order if u.worker not in departed]
+        aggregate_updates(order, net_f, "s", aggs, objective="avg_commit")
+    replan_total = time.perf_counter() - t0
+
+    out["repair_latency"] = {
+        "n_hosts": n_hosts, "n_batch": n_batch, "n_events": n_events,
+        "repair_total_s": repair_total, "replan_total_s": replan_total,
+        "kept": kept, "replanned": replanned,
+        "repair_event_us": repair_total / n_events * 1e6,
+        "replan_event_us": replan_total / n_events * 1e6,
+        "speedup": replan_total / max(repair_total, 1e-12)}
+    record("repair_latency_u4096", repair_total + replan_total,
+           f"repair={repair_total/n_events*1e6:.0f}us/event"
+           f"(kept={kept},replanned={replanned});"
+           f"always_replan={replan_total/n_events*1e6:.0f}us/event;"
+           f"speedup={replan_total/max(repair_total, 1e-12):.0f}x")
+
+
+def bench_cluster_4096(out: dict):
+    """Scale headline: the event-driven control plane sustains U=4096
+    workers end-to-end through a dynamic scenario — a 4096-update
+    macro-batch is planned once, then an aggregator failure, a worker
+    leave, bandwidth jitter and a join all land mid-flight and are
+    answered by plan repair (affected groups only) instead of waiting for
+    the next batch tick.  Compute-time sampling for the 4096-worker
+    fan-out runs through the vectorized jnp path."""
+    from repro.core.scenario import (AggregatorFail, BandwidthTrace,
+                                     WorkerJoin, WorkerLeave)
+    n, horizon = 4096, 1.0
+    scen = [AggregatorFail(time=0.62, host="worker0"),
+            WorkerLeave(time=0.66, worker="worker20"),
+            BandwidthTrace(time=0.70, host="worker4000",
+                           up=gbps(1), down=gbps(1)),
+            WorkerJoin(time=0.74, worker=None)]
+    cfg = SchedulerConfig(server="server",
+                          aggregators=[f"worker{i}" for i in range(16)],
+                          tau_max=2 * n, mode="async", batch_interval=0.1)
+    t0 = time.perf_counter()
+    sim = ClusterSim(n, cfg, update_size=mb(10), compute_time=0.5,
+                     straggler=C2, bandwidth=N2, monitor_lag=0.1, seed=7,
+                     default_bw=gbps(10), scenario=scen,
+                     plan_repair=True, vector_compute=True)
+    res = sim.run(until_time=horizon)
+    dt = time.perf_counter() - t0
+    out["cluster_4096"] = {
+        "n_workers": n, "horizon_s": horizon, "wall_s": dt,
+        "commits": res.n_commits, "repairs": res.repairs,
+        "reroutes": res.reroutes, "joins": res.joins,
+        "leaves": res.leaves, "drops": res.drops,
+        "commit_rate": res.commit_rate}
+    record("cluster_4096_dynamic", dt,
+           f"commits={res.n_commits};repairs={res.repairs};"
+           f"reroutes={res.reroutes};joins={res.joins};"
+           f"leaves={res.leaves};wall={dt:.0f}s")
 
 
 def bench_trace_artifact(out: dict, path: str = "runs/trace_dynamic_failover.json"):
@@ -624,6 +755,9 @@ def main(argv=None) -> None:
                     help="data-plane + failover benches only (CI smoke); "
                          "writes BENCH_PR3.json and BENCH_PR4.json and "
                          "skips the slow simulator grid")
+    ap.add_argument("--scale", action="store_true",
+                    help="also run the U=4096 dynamic ClusterSim headline "
+                         "(~1 min; always part of the full suite)")
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
@@ -638,6 +772,9 @@ def main(argv=None) -> None:
         bench_failover_recovery(pr4)
         bench_divergence_vs_divmax(pr4)
         bench_planner_latency_vs_u(obs)
+        bench_repair_latency(obs)
+        if args.scale:
+            bench_cluster_4096(obs)
         bench_trace_artifact(obs)
         write_bench_json(pr3, "BENCH_PR3.json")
         write_bench_json(pr4, "BENCH_PR4.json")
@@ -658,6 +795,8 @@ def main(argv=None) -> None:
     bench_fused_dequant_aggregate(pr3)
     bench_flat_bucket_pack(pr3)
     bench_planner_latency_vs_u(obs)
+    bench_repair_latency(obs)
+    bench_cluster_4096(obs)
     bench_trace_artifact(obs)
     write_bench_json(pr3, "BENCH_PR3.json")
     write_bench_json(pr4, "BENCH_PR4.json")

@@ -84,7 +84,7 @@ def _evaluate_case(n: int, order: Sequence[Update], network: NetworkState,
                    server: str, aggregators: Sequence[str],
                    t_now: float) -> Optional[AggregationResult]:
     """One case of Alg. 3: first ``n`` updates direct, rest greedily grouped."""
-    nw = network.copy()
+    nw = network.overlay()
     direct = AggGroup(aggregator=None)
     groups: List[AggGroup] = [direct]
     assignment: Dict[int, int] = {}
@@ -166,7 +166,7 @@ def _evaluate_case_from_prefix(
     ``suffix_lb`` solo bounds of unprocessed updates.  Both prune exactly
     the cases the exhaustive scan would reject anyway.
     """
-    nw = prefix_net.copy()
+    nw = prefix_net.overlay()
     direct = AggGroup(aggregator=None, members=list(prefix_members),
                       member_transfers=list(prefix_transfers))
     groups: List[AggGroup] = [direct]
@@ -267,7 +267,7 @@ def _aggregate_incremental(order: List[Update], network: NetworkState,
                   else network.up[g.worker].time_to_consume(t0, g.size))
             suffix_lb[i] = suffix_lb[i + 1] + lb
 
-    prefix_net = network.copy()
+    prefix_net = network.overlay()
     prefix_members: List[Update] = []
     prefix_transfers: List[Transfer] = []
     prefix_commits: Dict[int, float] = {}
@@ -306,6 +306,18 @@ def _aggregate_incremental(order: List[Update], network: NetworkState,
             prefix_maxend = max(prefix_maxend, tr.t_end)
             prefix_sum += tr.t_end
     assert best is not None, "n == |U| (all-direct) is always feasible"
+    # The winner's overlay chains through the memoized prefix, which the
+    # loop kept mutating after the case was evaluated — rebuild the plan's
+    # network against the pristine input by replaying its own transfers
+    # (O(batch) commits, independent of fleet size).  Plan content
+    # (groups / assignment / commit times) is untouched.
+    final = network.overlay()
+    for grp in best.groups:
+        for tr in grp.member_transfers:
+            final.commit_transfer(tr)
+        if grp.aggregate_transfer is not None:
+            final.commit_transfer(grp.aggregate_transfer)
+    best.network = final
     return best
 
 
@@ -318,13 +330,13 @@ def aggregate_updates(order: Sequence[Update], network: NetworkState,
     ``objective``: ``"makespan"`` (sync, eq. 16) or ``"avg_commit"`` (async,
     eq. 17).  ``planner``: ``"incremental"`` (default; memoized prefix +
     pruning, same plan) or ``"exhaustive"`` (the literal Alg. 3 reference).
-    The input ``network`` is *not* mutated; the chosen case's mutated copy
-    is returned in the result.
+    The input ``network`` is *not* mutated; the chosen case's reservations
+    live in the copy-on-write overlay returned in the result.
     """
     order = list(order)
     if not order:
         return AggregationResult(groups=[AggGroup(aggregator=None)], assignment={},
-                                 makespan=t_now, network=network.copy())
+                                 makespan=t_now, network=network.overlay())
     if planner == "incremental":
         return _aggregate_incremental(order, network, server, aggregators,
                                       t_now, objective)
@@ -361,7 +373,7 @@ def plan_distribution(model_size: float, requesters: Sequence[str],
     recv_time: Dict[str, float] = {}
     best: Optional[Dict[str, float]] = None
     for n in range(len(requesters) + 1):
-        nw = network.copy()
+        nw = network.overlay()
         times: Dict[str, float] = {}
         t_max = t_now
         feasible = True

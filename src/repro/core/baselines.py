@@ -120,7 +120,8 @@ class FairShareAsync:
         if isinstance(ev, WorkerJoin):
             name = ev.worker
             if name is None:
-                while f"worker{self._next_worker_id}" in self.up:
+                while (f"worker{self._next_worker_id}" in self.up
+                       or f"worker{self._next_worker_id}" in self._dead):
                     self._next_worker_id += 1
                 name = f"worker{self._next_worker_id}"
                 self._next_worker_id += 1
@@ -143,6 +144,10 @@ class FairShareAsync:
             for fid in [fid for fid, f in flows.items() if f[1] == ev.worker]:
                 flows.pop(fid)
                 self.result.record_scenario_drop(count_total=True)
+            # bounded state under churn: drop the departed NIC's rate
+            # entries (mirrors NetworkState.remove_host in ClusterSim)
+            self.up.pop(ev.worker, None)
+            self.down.pop(ev.worker, None)
         elif isinstance(ev, BandwidthTrace):
             if ev.host in self.up and ev.host not in self._dead:
                 if ev.up is not None:

@@ -7,6 +7,26 @@ core (the paper's evaluation assumption).  Residual capacity of a link is a
 piecewise-constant function of time; reserving a transfer consumes the
 bottleneck residual bandwidth along its path, exactly as in Fig. 4(b)/(c).
 
+Two structural properties matter for planner scale (DESIGN.md §11):
+
+* ``Timeline`` mutations are *windowed*: ``add`` touches only the segments
+  overlapping ``[t0, t1)`` and re-coalesces just that window, instead of the
+  previous whole-list rebuild, so a reservation costs O(log s + w) for s
+  stored segments and w touched segments.
+* Planner look-aheads use :meth:`NetworkState.overlay` — a copy-on-write
+  delta view that copies a link ``Timeline`` only when it is first written —
+  instead of deep-copying every host timeline per candidate (O(changes),
+  not O(U)).  Path bottlenecks are walked lazily with a two-iterator merge
+  (:func:`make_profile_links`) rather than materializing the all-breakpoints
+  ``Timeline.minimum``.
+
+``Timeline`` separately tracks the link's *base* NIC rate so that a
+``set_rate_from`` (a ``BandwidthTrace`` / N-setting event) re-applies live
+reservations on top of the new rate instead of silently truncating them
+(which used to mint phantom bandwidth when the reservation was later
+released).  A rate drop below the reserved sum leaves the stored residual
+negative — queries clamp to zero, and releases restore exactly.
+
 Units: bytes and bytes/second.  Helpers for Gbps / MB are at module bottom.
 """
 
@@ -16,25 +36,35 @@ import bisect
 import itertools
 import math
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+from typing import (Dict, Iterable, Iterator, List, Mapping, Optional,
+                    Sequence, Tuple)
 
 INF = math.inf
 _EPS = 1e-9
 _REL_EPS = 1e-9     # relative rate tolerance for segment coalescing
+_GUARD_REL = 1e-6   # relative over-reservation guard in Timeline.add
 
 
 class Timeline:
-    """A piecewise-constant, non-negative rate function over ``[0, inf)``.
+    """A piecewise-constant rate function over ``[0, inf)``.
 
-    Stored as parallel lists of breakpoint times and the rate that holds from
-    each breakpoint until the next (the last rate extends to infinity).
+    Stored as parallel bisect-indexed lists of breakpoint times and the
+    *residual* rate that holds from each breakpoint until the next (the last
+    rate extends to infinity).  ``_bt``/``_br`` track the link's base NIC
+    rate the same way; ``base - residual`` at any instant is the live
+    reservation load, which ``set_rate_from`` preserves across NIC rate
+    changes.  Residuals may go negative internally (rate dropped below the
+    reserved sum); every query clamps to zero.
     """
 
-    __slots__ = ("times", "rates")
+    __slots__ = ("times", "rates", "_bt", "_br")
 
     def __init__(self, rate: float = 0.0):
+        r = float(rate)
         self.times: List[float] = [0.0]
-        self.rates: List[float] = [float(rate)]
+        self.rates: List[float] = [r]
+        self._bt: List[float] = [0.0]
+        self._br: List[float] = [r]
 
     # ------------------------------------------------------------------ #
     # construction / copying
@@ -43,6 +73,8 @@ class Timeline:
         t = Timeline.__new__(Timeline)
         t.times = list(self.times)
         t.rates = list(self.rates)
+        t._bt = list(self._bt)
+        t._br = list(self._br)
         return t
 
     @classmethod
@@ -54,14 +86,19 @@ class Timeline:
         return tl
 
     # ------------------------------------------------------------------ #
-    # queries
+    # queries (all clamp negative residuals to zero)
     # ------------------------------------------------------------------ #
     def _idx(self, t: float) -> int:
         """Index of the segment that contains time ``t``."""
         return bisect.bisect_right(self.times, t) - 1
 
     def rate_at(self, t: float) -> float:
-        return self.rates[self._idx(t)]
+        r = self.rates[self._idx(t)]
+        return r if r > 0.0 else 0.0
+
+    def base_rate_at(self, t: float) -> float:
+        """The NIC rate (ignoring reservations) at time ``t``."""
+        return self._br[bisect.bisect_right(self._bt, t) - 1]
 
     def segments(self, t_from: float = 0.0) -> Iterator[Tuple[float, float, float]]:
         """Yield ``(t0, t1, rate)``; the final segment has ``t1 == inf``."""
@@ -70,7 +107,8 @@ class Timeline:
         while i < n:
             t0 = max(self.times[i], t_from)
             t1 = self.times[i + 1] if i + 1 < n else INF
-            yield (t0, t1, self.rates[i])
+            r = self.rates[i]
+            yield (t0, t1, r if r > 0.0 else 0.0)
             i += 1
 
     def integrate(self, t0: float, t1: float) -> float:
@@ -86,15 +124,17 @@ class Timeline:
         """Earliest ``t`` such that ``integrate(t_start, t) >= size``.
 
         Returns ``inf`` when the timeline can never deliver ``size`` bytes.
+        Tolerances are relative to the transfer size and the link's rate
+        scale — absolute epsilons vanish against byte counts ~1e8.
         """
         if size <= 0:
             return t_start
+        byte_tol = _EPS + _REL_EPS * size
         remaining = size
         for t0, t1, r in self.segments(t_start):
             if r > _EPS:
-                dur = t1 - t0
-                cap = r * dur
-                if cap >= remaining - _EPS:
+                cap = r * (t1 - t0)
+                if cap >= remaining - byte_tol:
                     return t0 + remaining / r
                 remaining -= cap
         return INF
@@ -112,41 +152,87 @@ class Timeline:
         return i + 1
 
     def set_rate_from(self, t: float, rate: float) -> None:
-        """Set the rate to ``rate`` for all times ``>= t``."""
-        i = self._ensure_breakpoint(t)
-        del self.times[i + 1:]
-        del self.rates[i + 1:]
-        self.rates[i] = float(rate)
+        """Change the link's base NIC rate to ``rate`` for all times ``>= t``.
+
+        Live reservations are preserved: for every residual segment at or
+        after ``t``, the reserved load ``base - residual`` is re-subtracted
+        from the new rate.  If the new rate is below the reserved load the
+        stored residual goes negative (queries clamp to zero) so that a
+        later ``release`` restores exactly the new base — capacity is
+        conserved across mid-transfer bandwidth changes.
+        """
+        rate = float(rate)
+        self._ensure_breakpoint(t)
+        # split the residual at every base breakpoint after t, so each
+        # residual segment in [t, inf) sees a single base rate
+        for bt in list(self._bt):
+            if bt > t:
+                self._ensure_breakpoint(bt)
+        i = bisect.bisect_right(self.times, t) - 1
+        for k in range(i, len(self.times)):
+            reserved = self.base_rate_at(self.times[k]) - self.rates[k]
+            self.rates[k] = rate - reserved
+        # base := rate from t on
+        bi = bisect.bisect_right(self._bt, t) - 1
+        if self._bt[bi] == t:
+            del self._bt[bi + 1:]
+            del self._br[bi + 1:]
+            self._br[bi] = rate
+            if bi > 0 and self._br[bi - 1] == rate:
+                del self._bt[bi:]
+                del self._br[bi:]
+        else:
+            del self._bt[bi + 1:]
+            del self._br[bi + 1:]
+            if self._br[bi] != rate:
+                self._bt.append(t)
+                self._br.append(rate)
         self._coalesce()
 
-    def add(self, t0: float, t1: float, delta: float) -> None:
-        """Add ``delta`` to the rate over ``[t0, t1)`` (negative = reserve)."""
-        if t1 <= t0:
+    def add(self, t0: float, t1: float, delta: float,
+            allow_deficit: bool = False) -> None:
+        """Add ``delta`` to the rate over ``[t0, t1)`` (negative = reserve).
+
+        The over-reservation guard is relative: fp noise on a 10 Gbps link
+        is ~1e2 B/s absolute, so a fixed threshold either rejects valid
+        releases or admits real over-subscription depending on scale.
+        ``allow_deficit`` disables the guard for callers that *knowingly*
+        oversubscribe — the simulator enacting a plan computed on a lagged
+        monitor view after the real NIC rate dropped.  The deficit is
+        stored as a negative residual (queries clamp to zero) so a later
+        ``release`` still balances exactly.
+        """
+        if t1 <= t0 or delta == 0.0:
             return
         i = self._ensure_breakpoint(t0)
-        if t1 != INF:
-            j = self._ensure_breakpoint(t1)
-        else:
-            j = len(self.times)
+        j = self._ensure_breakpoint(t1) if t1 != INF else len(self.times)
+        guard = not allow_deficit and delta < 0.0
+        thr = -(_EPS + _GUARD_REL * -delta) if guard else 0.0
+        rates = self.rates
         for k in range(i, j):
-            r = self.rates[k] + delta
-            if r < 0:
-                if r < -1e-3:  # genuine over-subscription, not fp noise
-                    raise ValueError(
-                        f"over-reserved link: rate {self.rates[k]} + {delta} < 0 "
-                        f"at t={self.times[k]}"
-                    )
-                r = 0.0
-            self.rates[k] = r
-        self._coalesce()
+            r = rates[k]
+            nr = r + delta
+            if guard and nr < thr and r >= 0.0 and \
+                    nr < -(_EPS + _GUARD_REL * r):
+                raise ValueError(
+                    f"over-reserved link: rate {r} + {delta} < 0 "
+                    f"at t={self.times[k]}"
+                )
+            rates[k] = nr
+        self._coalesce_window(i, j)
 
-    def subtract_profile(self, profile: "Profile") -> None:
+    def subtract_profile(self, profile: "Profile",
+                         allow_deficit: bool = False) -> None:
         for t0, t1, r in profile.chunks:
-            self.add(t0, t1, -r)
+            self.add(t0, t1, -r, allow_deficit=allow_deficit)
 
     def add_profile(self, profile: "Profile") -> None:
         for t0, t1, r in profile.chunks:
             self.add(t0, t1, r)
+
+    @staticmethod
+    def _close(a: float, b: float) -> bool:
+        return abs(a - b) <= _EPS + _REL_EPS * max(abs(a), abs(b))
 
     def _coalesce(self) -> None:
         """Merge adjacent segments with (numerically) equal rates.
@@ -156,15 +242,53 @@ class Timeline:
         far above any absolute epsilon small enough to separate real
         rates.  Without the relative test, long churn scenarios grow the
         segment list without bound — every later ``bisect`` and segment
-        walk degrades linearly with the garbage (PR3 perf fix; bounded
-        growth is pinned by ``tests/test_network.py``).
+        walk degrades linearly with the garbage (bounded growth is pinned
+        by ``tests/test_network.py``).
         """
         nt, nr = [self.times[0]], [self.rates[0]]
         for t, r in zip(self.times[1:], self.rates[1:]):
-            if abs(r - nr[-1]) > _EPS + _REL_EPS * max(abs(r), abs(nr[-1])):
+            if not self._close(r, nr[-1]):
                 nt.append(t)
                 nr.append(r)
         self.times, self.rates = nt, nr
+
+    def _coalesce_window(self, i: int, j: int) -> None:
+        """Coalesce only segments ``[i-1, j]`` after a windowed mutation.
+
+        A timeline that is coalesced outside the window stays coalesced:
+        ``add`` shifts the window's rates by a constant, which preserves
+        interior inequality up to the relative tolerance, and the window's
+        two boundary pairs are re-checked here.  The scan is inlined and
+        exits without allocating in the (overwhelmingly common) case where
+        nothing merges — this runs once per reservation chunk.
+        """
+        rates = self.rates
+        lo = i - 1 if i > 0 else 0
+        n1 = len(rates) - 1
+        hi = j if j < n1 else n1
+        k = lo
+        while k < hi:
+            a = rates[k]
+            b = rates[k + 1]
+            d = a - b
+            if d < 0.0:
+                d = -d
+            if a < 0.0:
+                a = -a
+            if b < 0.0:
+                b = -b
+            if d <= _EPS + _REL_EPS * (a if a > b else b):
+                break
+            k += 1
+        else:
+            return
+        nt, nr = [self.times[lo]], [rates[lo]]
+        for k in range(lo + 1, hi + 1):
+            if not self._close(rates[k], nr[-1]):
+                nt.append(self.times[k])
+                nr.append(rates[k])
+        self.times[lo:hi + 1] = nt
+        self.rates[lo:hi + 1] = nr
 
     def forget_before(self, t: float) -> None:
         """Drop breakpoints strictly before ``t`` (the rate at ``t``
@@ -180,26 +304,60 @@ class Timeline:
             self.times = [0.0] + self.times[i + 1:]
             self.rates = self.rates[i:]
             self._coalesce()
+        bi = bisect.bisect_right(self._bt, t) - 1
+        if bi > 0:
+            self._bt = [0.0] + self._bt[bi + 1:]
+            self._br = self._br[bi:]
 
     # ------------------------------------------------------------------ #
     # combination
     # ------------------------------------------------------------------ #
     @staticmethod
     def minimum(timelines: Sequence["Timeline"]) -> "Timeline":
-        """Piecewise minimum of several timelines (path bottleneck, Fig 4b)."""
+        """Piecewise minimum of several timelines (path bottleneck, Fig 4b).
+
+        Built with a lazy merge walk over the inputs' segments — a single
+        pass over O(sum of segments), not the old all-breakpoints union
+        with a ``rate_at`` probe per timeline per breakpoint.
+        """
         assert timelines
         if len(timelines) == 1:
             return timelines[0].copy()
-        breakpoints = sorted(set(itertools.chain(*(t.times for t in timelines))))
-        out = Timeline(0.0)
-        out.times = breakpoints
-        out.rates = [min(tl.rate_at(t) for tl in timelines) for t in breakpoints]
-        out._coalesce()
+        out = Timeline.__new__(Timeline)
+        out.times, out.rates = [], []
+        for t0, _t1, r in merged_min_segments(timelines, 0.0):
+            if not out.rates or not Timeline._close(r, out.rates[-1]):
+                out.times.append(t0)
+                out.rates.append(r)
+        out._bt = list(out.times)
+        out._br = list(out.rates)
         return out
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         segs = ", ".join(f"[{t:.3g}:{r:.3g}]" for t, r in zip(self.times, self.rates))
         return f"Timeline({segs})"
+
+
+def merged_min_segments(timelines: Sequence[Timeline],
+                        t_from: float) -> Iterator[Tuple[float, float, float]]:
+    """Lazily yield ``(t0, t1, min_rate)`` over several timelines.
+
+    Advances one iterator per timeline in lockstep (smallest ``t1`` first);
+    never materializes the breakpoint union.  Rates are clamped ``>= 0`` by
+    the underlying :meth:`Timeline.segments`.
+    """
+    iters = [tl.segments(t_from) for tl in timelines]
+    cur = [next(it) for it in iters]       # every timeline covers [t_from, inf)
+    t = t_from
+    while True:
+        t_next = min(c[1] for c in cur)
+        yield (t, t_next, min(c[2] for c in cur))
+        if t_next == INF:
+            return
+        t = t_next
+        for k, c in enumerate(cur):
+            if c[1] <= t_next:
+                cur[k] = next(iters[k])
 
 
 @dataclass
@@ -221,6 +379,34 @@ class Profile:
         return sum((t1 - t0) * r for t0, t1, r in self.chunks)
 
 
+def _profile_from_segments(segs: Iterator[Tuple[float, float, float]],
+                           t_avail: float, size: float) -> Optional[Profile]:
+    if size <= 0:
+        return Profile([(t_avail, t_avail, 0.0)])
+    # the byte comparison is relative to the transfer size (fp error in
+    # ``cap`` is ~1e-8 * size, dwarfing any absolute epsilon at GB scale);
+    # the rate floor stays absolute — an arbitrarily slow link is still a
+    # usable link, and fully-consumed residuals are exactly zero
+    byte_tol = _EPS + _REL_EPS * size
+    chunks: List[Tuple[float, float, float]] = []
+    remaining = size
+    for t0, t1, r in segs:
+        if r <= _EPS:
+            continue
+        cap = r * (t1 - t0)
+        if cap >= remaining - byte_tol:
+            # the closing chunk must not overshoot the segment boundary:
+            # when the byte tolerance closes the profile, remaining/r can
+            # exceed t1 - t0 by a few ulps, and the overhang would reserve
+            # this segment's rate inside the *next* (possibly slower) one
+            t_end = t0 + remaining / r
+            chunks.append((t0, min(t_end, t1), r))
+            return Profile(chunks)
+        chunks.append((t0, t1, r))
+        remaining -= cap
+    return None
+
+
 def make_profile(residual: Timeline, t_avail: float, size: float) -> Optional[Profile]:
     """Greedy maximal-rate transfer profile over ``residual`` (Fig. 4(b)).
 
@@ -228,20 +414,72 @@ def make_profile(residual: Timeline, t_avail: float, size: float) -> Optional[Pr
     from ``t_avail`` until ``size`` bytes have moved.  Returns ``None`` if the
     residual can never carry ``size`` bytes.
     """
+    return _profile_from_segments(residual.segments(t_avail), t_avail, size)
+
+
+def make_profile_links(links: Sequence[Timeline], t_avail: float,
+                       size: float) -> Optional[Profile]:
+    """Greedy maximal-rate profile over the lazy min of several links.
+
+    The planner hot path: equivalent to
+    ``make_profile(Timeline.minimum(links), ...)`` but never materializes
+    the combined timeline — it stops walking as soon as the profile closes.
+    """
+    if not links:
+        return Profile([(t_avail, t_avail, 0.0)]) if size <= 0 else \
+            Profile([(t_avail, t_avail, INF)])
+    if len(links) == 2:
+        return _profile_min2(links[0], links[1], t_avail, size)
+    if len(links) == 1:
+        segs = links[0].segments(t_avail)
+    else:
+        segs = merged_min_segments(links, t_avail)
+    return _profile_from_segments(segs, t_avail, size)
+
+
+def _profile_min2(A: Timeline, B: Timeline, t_avail: float,
+                  size: float) -> Optional[Profile]:
+    """Two-link specialization of :func:`make_profile_links`.
+
+    Every path in the host/uplink-downlink model has exactly two links, so
+    this two-pointer walk over the raw segment lists is the planner's
+    innermost loop — same semantics as the generator-based generic walk,
+    without generator frames or per-segment tuple allocation.
+    """
     if size <= 0:
         return Profile([(t_avail, t_avail, 0.0)])
-    chunks: List[Tuple[float, float, float]] = []
+    byte_tol = _EPS + _REL_EPS * size
+    at, ar = A.times, A.rates
+    bt, br = B.times, B.rates
+    na, nb = len(at), len(bt)
+    ia = bisect.bisect_right(at, t_avail) - 1
+    ib = bisect.bisect_right(bt, t_avail) - 1
+    t0 = t_avail
     remaining = size
-    for t0, t1, r in residual.segments(t_avail):
-        if r <= _EPS:
-            continue
-        cap = r * (t1 - t0)
-        if cap >= remaining - _EPS:
-            chunks.append((t0, t0 + remaining / r, r))
-            return Profile(chunks)
-        chunks.append((t0, t1, r))
-        remaining -= cap
-    return None
+    chunks: List[Tuple[float, float, float]] = []
+    while True:
+        r = ar[ia]
+        rb_ = br[ib]
+        if rb_ < r:
+            r = rb_
+        ta1 = at[ia + 1] if ia + 1 < na else INF
+        tb1 = bt[ib + 1] if ib + 1 < nb else INF
+        t1 = ta1 if ta1 < tb1 else tb1
+        if r > _EPS:
+            cap = r * (t1 - t0)
+            if cap >= remaining - byte_tol:
+                t_end = t0 + remaining / r
+                chunks.append((t0, t_end if t_end < t1 else t1, r))
+                return Profile(chunks)
+            chunks.append((t0, t1, r))
+            remaining -= cap
+        if t1 == INF:
+            return None
+        if ta1 <= t1:
+            ia += 1
+        if tb1 <= t1:
+            ib += 1
+        t0 = t1
 
 
 # --------------------------------------------------------------------------- #
@@ -271,7 +509,9 @@ class NetworkState:
     """Hosts with independent up/down links and a congestion-free core.
 
     ``reserve`` mutates residual capacity; ``transfer_time`` is a pure query.
-    ``copy()`` is used by the scheduler's look-ahead (Alg. 2 line 8).
+    Planner look-aheads (Alg. 2 line 8, Alg. 3 case evaluation) use
+    :meth:`overlay` — an O(changes) copy-on-write view — instead of
+    :meth:`copy`, which deep-copies every host timeline.
     """
 
     def __init__(self, hosts: Iterable[str], default_bw: float):
@@ -285,6 +525,16 @@ class NetworkState:
         self.up[host] = Timeline(bw)
         self.down[host] = Timeline(bw)
 
+    def remove_host(self, host: str) -> None:
+        """Drop a departed host's timelines (WorkerLeave path).
+
+        Without this, ``hosts()``/``copy()``/``compact()`` grow
+        monotonically under churn.  Call only after in-flight transfers
+        touching the host have been released or re-pointed.
+        """
+        self.up.pop(host, None)
+        self.down.pop(host, None)
+
     def hosts(self) -> List[str]:
         return list(self.up)
 
@@ -295,13 +545,36 @@ class NetworkState:
         ns._uid = self._uid  # shared counter: uids stay unique across copies
         return ns
 
+    def overlay(self) -> "NetworkOverlay":
+        """An O(1) copy-on-write view for planner look-aheads.
+
+        Reservations recorded on the overlay copy only the touched link
+        timelines; the base is never mutated.  Overlays chain (an overlay
+        of an overlay), which is how the incremental planner keeps a
+        growing committed prefix without ever copying the full fleet.
+        Do not mutate the base while a live overlay still reads it.
+        """
+        return NetworkOverlay(self)
+
     def set_bandwidth(self, host: str, t: float, up: Optional[float] = None,
                       down: Optional[float] = None) -> None:
         """Change a host NIC's rate from time ``t`` on (paper's N settings)."""
         if up is not None:
-            self.up[host].set_rate_from(t, up)
+            self._wup(host).set_rate_from(t, up)
         if down is not None:
-            self.down[host].set_rate_from(t, down)
+            self._wdown(host).set_rate_from(t, down)
+
+    # -- writable link accessors (overridden by NetworkOverlay) ---------- #
+    def _wup(self, host: str) -> Timeline:
+        return self.up[host]
+
+    def _wdown(self, host: str) -> Timeline:
+        return self.down[host]
+
+    def _wpath(self, src: str, dst: str) -> List[Timeline]:
+        if src == dst:
+            return []
+        return [self._wup(src), self._wdown(dst)]
 
     # -- path model ------------------------------------------------------ #
     def path(self, src: str, dst: str) -> List[Timeline]:
@@ -319,7 +592,7 @@ class NetworkState:
     def transfer_time(self, src: str, dst: str, size: float,
                       t_avail: float) -> float:
         """Completion time of a maximal-rate transfer; pure query (no reserve)."""
-        prof = make_profile(self.residual(src, dst), t_avail, size)
+        prof = make_profile_links(self.path(src, dst), t_avail, size)
         return prof.t_end if prof is not None else INF
 
     # -- mutation ---------------------------------------------------------- #
@@ -338,19 +611,24 @@ class NetworkState:
         Pairs with :meth:`commit_transfer`; lets planners inspect the
         completion time and reserve without recomputing the profile.
         """
-        prof = make_profile(self.residual(src, dst), t_avail, size)
+        prof = make_profile_links(self.path(src, dst), t_avail, size)
         if prof is None:
             return None
         return Transfer(next(self._uid), src, dst, size, t_avail, prof)
 
-    def commit_transfer(self, transfer: Transfer) -> None:
-        """Apply a planned transfer's reservation to the residual links."""
-        for link in self.path(transfer.src, transfer.dst):
-            link.subtract_profile(transfer.profile)
+    def commit_transfer(self, transfer: Transfer, force: bool = False) -> None:
+        """Apply a planned transfer's reservation to the residual links.
+
+        ``force=True`` permits oversubscription (recorded as a negative
+        residual): the simulator uses it when enacting a plan computed on
+        the lagged monitor view after the actual NIC rate changed.
+        """
+        for link in self._wpath(transfer.src, transfer.dst):
+            link.subtract_profile(transfer.profile, allow_deficit=force)
 
     def release(self, transfer: Transfer) -> None:
         """Undo a reservation (used by replication's lead-reduction, §5.3)."""
-        for link in self.path(transfer.src, transfer.dst):
+        for link in self._wpath(transfer.src, transfer.dst):
             link.add_profile(transfer.profile)
 
     def compact(self, t_now: float) -> None:
@@ -365,6 +643,103 @@ class NetworkState:
         for tl in self.up.values():
             tl.forget_before(t_now)
         for tl in self.down.values():
+            tl.forget_before(t_now)
+
+
+class _OverlayLinks(Mapping):
+    """Read-only mapping view: ``delta`` entries shadow ``base``.
+
+    Iteration order is deterministic: base order (minus removed hosts)
+    followed by overlay-added hosts in insertion order.
+    """
+
+    __slots__ = ("_base", "_delta", "_removed")
+
+    def __init__(self, base: Mapping[str, Timeline],
+                 delta: Dict[str, Timeline], removed: set):
+        self._base = base
+        self._delta = delta
+        self._removed = removed
+
+    def __getitem__(self, host: str) -> Timeline:
+        if host in self._removed:
+            raise KeyError(host)
+        tl = self._delta.get(host)
+        if tl is not None:
+            return tl
+        return self._base[host]
+
+    def __iter__(self) -> Iterator[str]:
+        for h in self._base:
+            if h not in self._removed:
+                yield h
+        for h in self._delta:
+            if h not in self._base and h not in self._removed:
+                yield h
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self)
+
+    def __contains__(self, host: object) -> bool:
+        if host in self._removed:
+            return False
+        return host in self._delta or host in self._base
+
+
+class NetworkOverlay(NetworkState):
+    """Copy-on-write delta view over a base :class:`NetworkState`.
+
+    Reads fall through to the base; the first write to a link copies just
+    that one ``Timeline`` into the delta (O(changes) total, however large
+    the fleet).  ``copy()`` materializes a flat ``NetworkState``.  The view
+    is only valid while the base is unmutated.
+    """
+
+    def __init__(self, base: NetworkState):
+        self._base = base
+        self._removed: set = set()
+        self._up_delta: Dict[str, Timeline] = {}
+        self._down_delta: Dict[str, Timeline] = {}
+        self.up = _OverlayLinks(base.up, self._up_delta, self._removed)
+        self.down = _OverlayLinks(base.down, self._down_delta, self._removed)
+        self._uid = base._uid  # shared: uids stay unique across views
+
+    def changed_hosts(self) -> List[str]:
+        """Hosts whose links this overlay has written (repair diagnostics)."""
+        seen = dict.fromkeys(itertools.chain(self._up_delta, self._down_delta,
+                                             self._removed))
+        return list(seen)
+
+    def _wup(self, host: str) -> Timeline:
+        tl = self._up_delta.get(host)
+        if tl is None:
+            tl = self.up[host].copy()   # KeyError if removed/unknown
+            self._up_delta[host] = tl
+        return tl
+
+    def _wdown(self, host: str) -> Timeline:
+        tl = self._down_delta.get(host)
+        if tl is None:
+            tl = self.down[host].copy()
+            self._down_delta[host] = tl
+        return tl
+
+    def add_host(self, host: str, bw: float) -> None:
+        self._removed.discard(host)
+        self._up_delta[host] = Timeline(bw)
+        self._down_delta[host] = Timeline(bw)
+
+    def remove_host(self, host: str) -> None:
+        self._up_delta.pop(host, None)
+        self._down_delta.pop(host, None)
+        self._removed.add(host)
+
+    def compact(self, t_now: float) -> None:
+        # never reach through to the base: compacting a shared timeline
+        # would mutate state other overlays / the owner still read
+        for tl in self._up_delta.values():
+            tl.forget_before(t_now)
+        for tl in self._down_delta.values():
             tl.forget_before(t_now)
 
 

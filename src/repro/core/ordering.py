@@ -108,7 +108,7 @@ def order_updates(updates: Sequence[Update], network: NetworkState, server: str,
     if tau_max is not None:
         assign_deadlines(updates, tau_max, v_init)
 
-    nw = network if reserve else network.copy()
+    nw = network if reserve else network.overlay()
     pending: List[Update] = list(updates)
     order: List[Update] = []
     dropped: List[Update] = []
@@ -137,7 +137,7 @@ def order_updates(updates: Sequence[Update], network: NetworkState, server: str,
             # Look-ahead (§5.1.3): if the next pick would complete before the
             # current deadline-pick even after reserving its bandwidth, the
             # deadline pick would leave the server idle -> drop it now.
-            look = nw.copy()
+            look = nw.overlay()
             look.reserve(g_star.worker, server, g_star.size,
                          max(g_star.t_avail, t_now))
             g_next, t_next, _ = _pick(iteration + 1, pending, look, server, t_now)

@@ -78,8 +78,10 @@ class MLfabricScheduler:
                        *, t_now: float = 0.0) -> BatchPlan:
         """Run the three algorithms on one batch against ``network``.
 
-        ``network`` is the scheduler's *view* (possibly monitor-lagged); it
-        is mutated with all reservations of the accepted plan.
+        ``network`` is the scheduler's *view* (possibly monitor-lagged).  It
+        is never mutated: every pass plans on a copy-on-write overlay, and
+        the accepted plan's reservations live in ``plan.aggregation.network``
+        (an overlay whose base is ``network``).
         """
         cfg = self.config
 
@@ -93,9 +95,9 @@ class MLfabricScheduler:
                                     cfg.aggregators, t_now=t_now,
                                     objective="makespan", planner=cfg.planner)
         else:
-            # Plan the order on a scratch copy (reservations are re-made by
-            # the aggregation pass, which owns the concrete schedules).
-            ordering = order_updates(list(updates), network.copy(), cfg.server,
+            # Plan the order on a scratch overlay (reservations are re-made
+            # by the aggregation pass, which owns the concrete schedules).
+            ordering = order_updates(list(updates), network.overlay(), cfg.server,
                                      tau_max=cfg.tau_max, v_init=self.v_server,
                                      t_now=t_now)
             agg = aggregate_updates(ordering.order, network, cfg.server,

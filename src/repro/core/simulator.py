@@ -46,6 +46,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..obs.metrics import MetricsRegistry
+from .aggregation import AggregationResult, aggregate_updates
 from .delay import DelayTracker
 from .harness import HookBus, NULL_BUS
 from .network import NetworkState, gbps, mb
@@ -69,6 +70,15 @@ class StragglerModel:
     def sample(self, rng: random.Random) -> float:
         return self.factor if rng.random() < self.prob else 1.0
 
+    def sample_batch(self, rng: random.Random, n: int):
+        """Vectorized draw of ``n`` slowdown factors (one jnp op, not ``n``
+        Python RNG round-trips — the U=4096 fan-out path)."""
+        import jax
+        import jax.numpy as jnp
+        key = jax.random.PRNGKey(rng.getrandbits(32))
+        u = jax.random.uniform(key, (n,))
+        return jnp.where(u < self.prob, self.factor, 1.0)
+
 
 # Paper defaults: C1=(10%,2x), C2=(10%,4x), C3=(4%,2x)
 C1 = StragglerModel(0.10, 2.0)
@@ -86,6 +96,15 @@ class BandwidthModel:
 
     def sample(self, rng: random.Random) -> float:
         return rng.choices(list(self.levels), weights=list(self.probs))[0]
+
+    def sample_batch(self, rng: random.Random, n: int):
+        """Vectorized draw of ``n`` NIC rates (categorical over ``levels``)."""
+        import jax
+        import jax.numpy as jnp
+        key = jax.random.PRNGKey(rng.getrandbits(32))
+        p = jnp.asarray(self.probs, dtype=jnp.float32)
+        idx = jax.random.choice(key, len(self.levels), (n,), p=p / p.sum())
+        return jnp.asarray(self.levels)[idx]
 
 
 N1 = BandwidthModel()
@@ -122,6 +141,7 @@ _COUNTER_METRICS: Dict[str, str] = {
     "scenario_events_applied": "scenario/events_applied",
     "scenario_drops": "scenario/drops",     # updates lost to WorkerLeave
     "reroutes": "scenario/reroutes",        # in-flight re-plans (agg death)
+    "repairs": "scenario/repairs",          # event-driven plan repairs
     "joins": "scenario/joins",
     "leaves": "scenario/leaves",
     # fault-tolerance plane (§3.3 / §5.3):
@@ -233,6 +253,8 @@ class ClusterSim:
         on_replica_commit: Optional[Callable[[int, float], None]] = None,
         on_promote: Optional[Callable[[float, int], None]] = None,
         hooks: Optional[HookBus] = None,
+        plan_repair: bool = False,
+        vector_compute: bool = False,
     ):
         self.n_workers = n_workers
         self.workers = [f"worker{i}" for i in range(n_workers)]
@@ -261,6 +283,15 @@ class ClusterSim:
         # pays do-nothing calls (pinned by the golden-trace test).
         self.hooks = hooks if hooks is not None else NULL_BUS
         self.trace = self.hooks.tracer
+        # Event-driven repair (ROADMAP item 2): mid-flight topology events
+        # re-plan only the affected groups' survivors immediately instead of
+        # parking them in the pending pool until the next batch tick.
+        self.plan_repair = plan_repair
+        # jnp-vectorized worker loops (initial compute fan-out + per-period
+        # NIC re-draws): one batched draw instead of O(U) RNG round-trips.
+        # Off by default — it consumes the seeded RNG differently, so the
+        # golden traces pin the scalar path.
+        self.vector_compute = vector_compute
 
         hosts = list(self.workers) + [self.cfg.server]
         if self.cfg.replica:
@@ -326,8 +357,14 @@ class ClusterSim:
         self.hooks.on_run_start(self)
         t = 0.0
         # seed events: every worker starts computing; NIC fluctuations begin.
-        for w in self.workers:
-            self._schedule_compute(w, t)
+        if self.vector_compute and self.workers:
+            slows = self.straggler.sample_batch(self.rng, len(self.workers))
+            for w, slow in zip(self.workers, slows.tolist()):
+                self._push_event(t + self.compute_time * slow, "compute_done",
+                                 worker=w)
+        else:
+            for w in self.workers:
+                self._schedule_compute(w, t)
         if self.bandwidth.period < math.inf:
             self._push_event(self.bandwidth.period, "bw_change")
         self._push_event(self.cfg.batch_interval, "batch")
@@ -391,7 +428,8 @@ class ClusterSim:
     def _apply_join(self, t: float, ev: WorkerJoin) -> None:
         name = ev.worker
         if name is None:
-            while f"worker{self._next_worker_id}" in self.net_actual.up:
+            while (f"worker{self._next_worker_id}" in self.net_actual.up
+                   or f"worker{self._next_worker_id}" in self._dead):
                 self._next_worker_id += 1
             name = f"worker{self._next_worker_id}"
             self._next_worker_id += 1
@@ -482,10 +520,20 @@ class ClusterSim:
                                  epoch=self._replica_epoch[uid])
             else:
                 self._cancel_replica_copy(t, uid)
+        # punted replica copies owned by the leaver would otherwise be
+        # re-planned against a host the network no longer knows: re-source
+        # them from the server (which holds every committed update — punts
+        # are always of committed work), mirroring ``_enact_replica``.
+        rep_state = self.scheduler.replication_state
+        rep_state.punted = [
+            dataclasses.replace(u, worker=self.cfg.server)
+            if u.worker == worker else u
+            for u in rep_state.punted]
         # membership is control-plane: both network views drop the host now
-        # (after releases, so the dead NIC's timelines end up flat zero)
+        # (after releases) so state stays bounded under churn — a departed
+        # NIC's timelines would otherwise live in every copy() forever
         for net in (self.net_actual, self.net_lagged):
-            net.set_bandwidth(worker, t, up=0.0, down=0.0)
+            net.remove_host(worker)
 
     def _apply_aggregator_fail(self, t: float, host: str) -> None:
         if host in self.aggregators:
@@ -497,6 +545,7 @@ class ClusterSim:
         # phantom flows would throttle the retransmissions — and the
         # never-delivered aggregate's bytes are refunded.
         released_aggregates: set = set()
+        rerouted: List[Update] = []
         for uid, info in list(self._inflight.items()):
             if info["aggregator"] == host:
                 self._cancel_commit(uid)
@@ -511,10 +560,49 @@ class ClusterSim:
                                              refund_network=agg_tr.size)
                 u: Update = info["update"]
                 u.t_avail = t
-                self._pending.append(u)
+                rerouted.append(u)
                 self.result.reroutes += 1
                 self.trace.instant("reroute", cat="scenario", track="scenario",
                                    ts=t, args={"uid": uid, "aggregator": host})
+        if rerouted:
+            if self.plan_repair and not self._server_failed:
+                self._repair_replan(t, rerouted)
+            else:
+                self._pending.extend(rerouted)
+
+    def _repair_replan(self, t: float, updates: List[Update]) -> None:
+        """Event-driven plan repair (ROADMAP item 2, ``plan_repair=True``).
+
+        Re-plan only the affected groups' surviving members, immediately,
+        on the actual network — which still carries every unaffected
+        reservation, so the rest of the batch plan is kept intact — instead
+        of parking them in the pending pool until the next batch tick.
+        Updates whose owner departed follow the usual confiscate/drop path.
+        """
+        alive = [u for u in updates if u.worker not in self._dead]
+        for u in updates:
+            if u.worker in self._dead:
+                if self.cfg.replica is not None:
+                    self._confiscate(u.uid)
+                else:
+                    self._drop_lost(u.uid)
+        if not alive:
+            return
+        # deterministic SJF order (Alg. 2's core rule) for the mini-batch;
+        # no tau/drop pass — these updates were already admitted once
+        order = sorted(alive, key=lambda u: (u.size, u.uid))
+        agg = aggregate_updates(order, self.net_actual, self.cfg.server,
+                                list(self.aggregators), t_now=t,
+                                objective="avg_commit",
+                                planner=self.cfg.planner)
+        commit = self._enact(agg, t)
+        self.result.repairs += 1
+        self.trace.instant("repair", cat="scenario", track="scenario", ts=t,
+                           args={"updates": len(order)})
+        for u in order:
+            self._push_event(commit[u.uid], "commit", uid=u.uid,
+                             epoch=self._commit_epoch.get(u.uid, 0),
+                             aggregated=agg.assignment.get(u.uid, 0) != 0)
 
     def _release_unfinished(self, t: float, tr, *, refund_server: float = 0.0,
                             refund_network: float = 0.0) -> None:
@@ -692,8 +780,18 @@ class ClusterSim:
 
     def _on_bw_change(self, t: float) -> None:
         """Paper's N settings: every period, every NIC re-draws its rate."""
-        for w in self.workers:
-            up, down = self.bandwidth.sample(self.rng), self.bandwidth.sample(self.rng)
+        if self.vector_compute and self.workers:
+            draws = self.bandwidth.sample_batch(
+                self.rng, 2 * len(self.workers)).tolist()
+            ups, downs = draws[::2], draws[1::2]
+        else:
+            ups = downs = None
+        for i, w in enumerate(self.workers):
+            if ups is not None:
+                up, down = ups[i], downs[i]
+            else:
+                up, down = (self.bandwidth.sample(self.rng),
+                            self.bandwidth.sample(self.rng))
             self.net_actual.set_bandwidth(w, t, up=up, down=down)
             self._push_event(t + self.monitor_lag, "monitor_report",
                              host=w, up=up, down=down)
@@ -734,8 +832,10 @@ class ClusterSim:
                                   {"t": t, "updates": len(batch)})
         import time as _time
         w0 = _time.perf_counter()
-        plan = self.scheduler.schedule_batch(batch, self.net_lagged.copy(),
-                                             t_now=t)
+        # the scheduler plans entirely on copy-on-write overlays, so the
+        # lagged view is passed by reference — the old per-batch deep copy
+        # was O(hosts) and dominated planning cost at U=4096
+        plan = self.scheduler.schedule_batch(batch, self.net_lagged, t_now=t)
         self.result.scheduler_wall_time += _time.perf_counter() - w0
         self.result.scheduler_batches += 1
         # sim-time only in the trace: planner wall-clock goes to metrics, so
@@ -747,7 +847,7 @@ class ClusterSim:
 
         # Enact the plan on the *actual* network: replay the same structure
         # (order, grouping) and take true completion times from it.
-        commit_times = self._enact(plan, t)
+        commit_times = self._enact(plan.aggregation, t)
 
         for g in plan.dropped:
             meta = self._uid_meta.pop(g.uid)
@@ -779,7 +879,7 @@ class ClusterSim:
                                 {"t": t, "planned": len(plan.order),
                                  "dropped": len(plan.dropped)})
 
-    def _enact(self, plan: BatchPlan, t_now: float) -> Dict[int, float]:
+    def _enact(self, agg: AggregationResult, t_now: float) -> Dict[int, float]:
         """Replay the plan's structure on the actual network -> true times.
 
         Byte accounting (pinned by tests against ``AggregationResult``):
@@ -791,7 +891,7 @@ class ClusterSim:
         """
         commit: Dict[int, float] = {}
         server = self.cfg.server
-        for grp in plan.aggregation.groups:
+        for grp in agg.groups:
             if grp.aggregator is None:
                 for g in grp.members:
                     tr = self.net_actual.reserve(g.worker, server, g.size,

@@ -1,0 +1,242 @@
+"""Plan repair (ROADMAP item 2): repaired plans are identical to full replans.
+
+The repair invariant everything downstream relies on:
+``repair_aggregation`` returns exactly the plan a from-scratch
+``aggregate_updates`` run would produce on the surviving order against the
+post-event network — via the O(|changes|) footprint check when the event is
+invisible to the batch (tier 1), via a scoped replan otherwise (tier 2).
+
+Checked three ways: a seeded randomized corpus over all event kinds, a
+sweep deriving events from every scenario in the library, and end-to-end
+``ClusterSim(plan_repair=True)`` runs across the library.
+"""
+
+import math
+import random
+
+from repro.core.aggregation import aggregate_updates
+from repro.core.network import NetworkState, gbps, mb
+from repro.core.ordering import Update
+from repro.core.repair import plan_footprint, repair_aggregation
+from repro.core.scenario import (AggregatorFail, BandwidthTrace, WorkerJoin,
+                                 WorkerLeave)
+from repro.core.scheduler import SchedulerConfig
+from repro.core.simulator import C2, ClusterSim, N2
+from repro.scenarios import (aggregator_outage, churn, congestion_wave,
+                             flash_crowd, paper_dynamic_cluster)
+
+SERVER = "server"
+
+
+def _assert_plans_identical(a, b):
+    assert a.assignment == b.assignment
+    assert a.commit_times == b.commit_times
+    assert a.makespan == b.makespan
+    assert len(a.groups) == len(b.groups)
+    for ga, gb in zip(a.groups, b.groups):
+        assert ga.aggregator == gb.aggregator
+        assert [m.uid for m in ga.members] == [m.uid for m in gb.members]
+        assert [(tr.t_start, tr.t_end) for tr in ga.member_transfers] == \
+               [(tr.t_start, tr.t_end) for tr in gb.member_transfers]
+        ea = ga.aggregate_transfer
+        eb = gb.aggregate_transfer
+        assert (ea is None) == (eb is None)
+        if ea is not None:
+            assert (ea.t_start, ea.t_end) == (eb.t_start, eb.t_end)
+
+
+def _cluster(rng, n_hosts, n_batch, n_aggs):
+    net = NetworkState([], default_bw=gbps(10))
+    net.add_host(SERVER, rng.choice([gbps(5), gbps(10)]))
+    hosts = [f"w{i}" for i in range(n_hosts)]
+    for h in hosts:
+        net.add_host(h, rng.choice([gbps(1), gbps(5), gbps(10)]))
+    aggs = hosts[:n_aggs]
+    members = rng.sample(hosts, n_batch)
+    order = [Update(uid=i, worker=w, size=mb(rng.choice([10, 50, 100])),
+                    version=0, norm=1.0, t_avail=rng.uniform(0.0, 0.5))
+             for i, w in enumerate(members)]
+    return net, hosts, aggs, order
+
+
+def _apply_and_repair(rng, net, hosts, aggs, order, prev, objective):
+    """Draw one event, apply it to the base network, repair, full-replan."""
+    kind = rng.choice(["bw", "leave", "join", "agg_fail"])
+    changed, departed = set(), set()
+    prev_roster = list(aggs)
+    aggs = list(aggs)
+    if kind == "bw":
+        h = rng.choice(hosts)
+        net.set_bandwidth(h, rng.uniform(0.0, 1.0),
+                          up=rng.choice([gbps(1), gbps(10)]),
+                          down=rng.choice([gbps(1), gbps(10)]))
+        changed = {h}
+    elif kind == "leave":
+        h = rng.choice(hosts)
+        net.remove_host(h)
+        departed = {h}
+    elif kind == "join":
+        h = f"joiner{rng.randrange(10 ** 6)}"
+        net.add_host(h, gbps(10))
+        changed = {h}
+        if rng.random() < 0.5:  # the joiner may refill the roster
+            aggs.append(h)
+    else:
+        if not aggs:
+            return None
+        h = aggs.pop(rng.randrange(len(aggs)))
+        changed = {h}
+
+    rep = repair_aggregation(prev, order, net, SERVER, aggs,
+                             t_now=0.0, objective=objective,
+                             changed=changed, departed=departed,
+                             prev_aggregators=prev_roster)
+    surviving = [u for u in order if u.worker not in departed]
+    live_aggs = [a for a in aggs if a not in departed]
+    full = aggregate_updates(surviving, net, SERVER, live_aggs,
+                             t_now=0.0, objective=objective)
+    return rep, full, departed, changed, aggs, prev_roster
+
+
+def test_repair_identical_to_full_replan_random_corpus():
+    rng = random.Random(20260808)
+    kept = replanned = 0
+    for _ in range(120):
+        objective = rng.choice(["makespan", "avg_commit"])
+        net, hosts, aggs, order = _cluster(
+            rng, n_hosts=rng.randrange(6, 24), n_batch=rng.randrange(1, 6),
+            n_aggs=rng.randrange(0, 3))
+        prev = aggregate_updates(order, net, SERVER, aggs,
+                                 t_now=0.0, objective=objective)
+        out = _apply_and_repair(rng, net, hosts, aggs, order, prev, objective)
+        if out is None:
+            continue
+        rep, full, departed, changed, roster, prev_roster = out
+        _assert_plans_identical(rep.plan, full)
+        if rep.kept:
+            kept += 1
+            assert rep.plan is prev  # tier 1 keeps every reservation intact
+        else:
+            replanned += 1
+            fp = plan_footprint(order, SERVER, roster) | set(prev_roster)
+            assert ((set(changed) | set(departed)) & fp) \
+                or (set(prev_roster) ^ set(roster))
+    # both tiers must actually be exercised by the corpus
+    assert kept > 10 and replanned > 10
+
+
+def test_repair_cost_is_footprint_bounded_at_scale():
+    """At U=4096 an event on an uninvolved host is an O(1) keep."""
+    rng = random.Random(1)
+    net, hosts, aggs, order = _cluster(rng, n_hosts=4096, n_batch=8,
+                                       n_aggs=2)
+    prev = aggregate_updates(order, net, SERVER, aggs, t_now=0.0,
+                             objective="avg_commit")
+    fp = plan_footprint(order, SERVER, aggs)
+    outsider = next(h for h in reversed(hosts) if h not in fp)
+    net.set_bandwidth(outsider, 0.5, up=gbps(1), down=gbps(1))
+    rep = repair_aggregation(prev, order, net, SERVER, aggs, t_now=0.0,
+                             objective="avg_commit", changed={outsider})
+    assert rep.kept and rep.plan is prev
+    assert rep.footprint_size <= len(order) + len(aggs) + 1
+
+
+def test_repair_identity_across_scenario_library():
+    """Every library event kind, applied to a planned batch, repairs to the
+    exact full replan."""
+    scenarios = [
+        churn(16), aggregator_outage(["w0", "w1"]), flash_crowd(4),
+        congestion_wave([f"w{i}" for i in range(4)]),
+        paper_dynamic_cluster(16, seed=3),
+    ]
+    rng = random.Random(42)
+    for scenario in scenarios:
+        net, hosts, aggs, order = _cluster(rng, n_hosts=16, n_batch=5,
+                                           n_aggs=2)
+        prev = aggregate_updates(order, net, SERVER, aggs, t_now=0.0,
+                                 objective="avg_commit")
+        live_aggs = list(aggs)
+        prev_roster = list(aggs)
+        for ev in scenario:
+            changed, departed = set(), set()
+            if isinstance(ev, BandwidthTrace):
+                if ev.host not in net.up:
+                    continue
+                net.set_bandwidth(ev.host, ev.time, up=ev.up, down=ev.down)
+                changed = {ev.host}
+            elif isinstance(ev, WorkerLeave):
+                if ev.worker not in net.up:
+                    continue
+                net.remove_host(ev.worker)
+                departed = {ev.worker}
+            elif isinstance(ev, WorkerJoin):
+                name = ev.worker or f"j{rng.randrange(10 ** 6)}"
+                if name in net.up:
+                    continue
+                net.add_host(name, gbps(10))
+                changed = {name}
+            elif isinstance(ev, AggregatorFail):
+                if ev.host not in live_aggs:
+                    continue
+                live_aggs.remove(ev.host)
+                changed = {ev.host}
+            else:
+                continue
+            order = [u for u in order if u.worker not in departed]
+            rep = repair_aggregation(prev, order, net, SERVER, live_aggs,
+                                     t_now=0.0, objective="avg_commit",
+                                     changed=changed, departed=departed,
+                                     prev_aggregators=prev_roster)
+            full = aggregate_updates(order, net, SERVER, live_aggs,
+                                     t_now=0.0, objective="avg_commit")
+            _assert_plans_identical(rep.plan, full)
+            prev = rep.plan  # chain: next event repairs the repaired plan
+            prev_roster = list(live_aggs)
+
+
+def test_cluster_sim_plan_repair_across_library():
+    """End-to-end: the event-driven repair path completes every library
+    scenario with sane accounting and never double-commits an update."""
+    cases = [
+        ("churn", churn(12, leave_at=2.0, rejoin_at=6.0)),
+        ("agg-outage", aggregator_outage(["worker0", "worker1"], fail_at=2.0)),
+        ("flash-crowd", flash_crowd(4, start=1.0)),
+        ("wave", congestion_wave([f"worker{i}" for i in range(4)], start=1.5)),
+        ("composite", paper_dynamic_cluster(12, seed=1, horizon=10.0)),
+    ]
+    for name, scenario in cases:
+        cfg = SchedulerConfig(server="server",
+                              aggregators=["worker0", "worker1"],
+                              tau_max=12, mode="async", batch_interval=0.1)
+        sim = ClusterSim(12, cfg, update_size=mb(100), compute_time=0.05,
+                         straggler=C2, bandwidth=N2, monitor_lag=0.2,
+                         seed=5, default_bw=gbps(1.5), scenario=scenario,
+                         plan_repair=True)
+        res = sim.run(until_time=10.0)
+        assert res.n_commits > 0, name
+        uids = [c.uid for c in res.commits]
+        assert len(uids) == len(set(uids)), name
+        assert res.sim_time <= 10.0 and math.isfinite(res.sim_time), name
+        # a scenario that re-routes in-flight groups must repair, not park
+        if res.reroutes:
+            assert res.repairs > 0, name
+
+
+def test_plan_repair_beats_or_matches_pending_on_reroutes():
+    """Repaired members re-enter flight at the event, not at the next batch
+    tick — the repair run must never commit fewer updates on the pinned
+    aggregator-outage scenario."""
+    def run(repair):
+        cfg = SchedulerConfig(server="server",
+                              aggregators=["worker0", "worker1"],
+                              tau_max=12, mode="async", batch_interval=0.1)
+        sim = ClusterSim(12, cfg, update_size=mb(100), compute_time=0.05,
+                         straggler=C2, bandwidth=N2, monitor_lag=0.2,
+                         seed=5, default_bw=gbps(1.5),
+                         scenario=aggregator_outage(["worker0", "worker1"],
+                                                    fail_at=2.0),
+                         plan_repair=repair)
+        return sim.run(until_time=10.0)
+
+    with_repair, without = run(True), run(False)
+    assert with_repair.n_commits >= without.n_commits
