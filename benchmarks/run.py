@@ -676,6 +676,80 @@ def bench_cluster_4096(out: dict):
            f"leaves={res.leaves};wall={dt:.0f}s")
 
 
+def bench_lossy_transport(out: dict, *, fast: bool = False):
+    """PR8 tentpole: time-to-target under lossy links — lossless (ideal
+    fabric) vs reliable retransmit vs bounded-loss acceptance, across the
+    scenario library's two loss presets.
+
+    Each cell runs the identical seeded cluster until the same commit
+    target and reports the simulated time that took (the paper's
+    time-to-accuracy axis, with commits standing in for steps), plus the
+    transport counters that explain it: retransmitted bytes stretch the
+    reliable rows, accepted-loss bytes shrink the bounded rows' repair
+    volume.  The zero-loss identity (bounded == lossless when no loss is
+    scheduled) is asserted by tests/test_transport.py, not timed here."""
+    from repro.core import TransportConfig
+    from repro.scenarios import burst_loss, congestion_loss
+
+    n = 12 if fast else 16
+    target = 120 if fast else 400
+    horizon = 60.0
+    presets = {
+        "burst_loss": lambda: burst_loss(
+            [f"worker{i}" for i in range(0, n, 2)],
+            start=2.0, duration=1.5, rate=0.3, interval=4.0,
+            bursts=2 if fast else 6),
+        "congestion_loss": lambda: congestion_loss(
+            [f"worker{i}" for i in range(0, n, 4)],
+            start=3.0, duration=4.0, rate=0.15, corrupt_rate=0.05),
+    }
+    policies = {
+        "lossless": lambda: TransportConfig(policy="lossless"),
+        "reliable": lambda: TransportConfig(policy="reliable"),
+        "bounded": lambda: TransportConfig(policy="bounded",
+                                           loss_tolerance=0.3),
+    }
+    t0 = time.perf_counter()
+    rows = []
+    for pname, make_scen in presets.items():
+        for tname, make_tc in policies.items():
+            cfg = SchedulerConfig(server="server",
+                                  aggregators=["worker0", "worker1"],
+                                  tau_max=100, mode="async",
+                                  batch_interval=0.5)
+            res = ClusterSim(n, cfg, update_size=mb(100), compute_time=0.05,
+                             straggler=C2, bandwidth=N2, seed=7,
+                             scenario=make_scen(), transport=make_tc(),
+                             ).run(until_time=horizon, until_commits=target)
+            m = res.metrics
+            rows.append({
+                "scenario": pname, "policy": tname,
+                "commit_target": target, "commits": res.n_commits,
+                "time_to_target_s": res.sim_time,
+                "commit_rate": res.commit_rate,
+                "retransmits": res.retransmits,
+                "timeouts": res.transport_timeouts,
+                "expired": res.transport_expired,
+                "drops": res.drops,
+                "bytes_lost_mb": m.counter("transport/bytes_lost").value / 1e6,
+                "bytes_corrupted_mb":
+                    m.counter("transport/bytes_corrupted").value / 1e6,
+                "bytes_accepted_mb":
+                    m.counter("transport/bytes_accepted").value / 1e6,
+                "bytes_retransmitted_mb":
+                    m.counter("transport/bytes_retransmitted").value / 1e6,
+            })
+    dt = time.perf_counter() - t0
+    out["lossy_transport"] = {
+        "n_workers": n, "commit_target": target, "horizon_s": horizon,
+        "rows": rows}
+    cells = ";".join(
+        f"{r['scenario']}/{r['policy']}={r['time_to_target_s']:.1f}s"
+        f"(retx={r['retransmits']},acc={r['bytes_accepted_mb']:.0f}MB)"
+        for r in rows)
+    record("lossy_transport_time_to_target", dt, cells)
+
+
 def bench_trace_artifact(out: dict, path: str = "runs/trace_dynamic_failover.json"):
     """DESIGN.md §10 trace artifact: the paper's dynamic-cluster scenario
     and the §3.3 server-failover scenario, run with a real ``Tracer`` on
@@ -764,6 +838,7 @@ def main(argv=None) -> None:
     pr3: dict = {}
     pr4: dict = {}
     obs: dict = {}
+    pr8: dict = {}
     if args.fast:
         bench_fig2_aggregation()
         bench_fused_dequant_aggregate(pr3)
@@ -771,6 +846,7 @@ def main(argv=None) -> None:
         bench_kernel_flash_attention()
         bench_failover_recovery(pr4)
         bench_divergence_vs_divmax(pr4)
+        bench_lossy_transport(pr8, fast=True)
         bench_planner_latency_vs_u(obs)
         bench_repair_latency(obs)
         if args.scale:
@@ -778,6 +854,7 @@ def main(argv=None) -> None:
         bench_trace_artifact(obs)
         write_bench_json(pr3, "BENCH_PR3.json")
         write_bench_json(pr4, "BENCH_PR4.json")
+        write_bench_json(pr8, "BENCH_PR8.json", config={"fast": True})
         write_bench_json(obs, "BENCH_OBS.json", config={"fast": True})
         return
     bench_fig2_aggregation()
@@ -788,6 +865,7 @@ def main(argv=None) -> None:
     bench_dynamic_cluster()
     bench_failover_recovery(pr4)
     bench_divergence_vs_divmax(pr4)
+    bench_lossy_transport(pr8)
     bench_incremental_planner()
     bench_sec74_scheduler_scaling()
     bench_roofline_summary()
@@ -800,6 +878,7 @@ def main(argv=None) -> None:
     bench_trace_artifact(obs)
     write_bench_json(pr3, "BENCH_PR3.json")
     write_bench_json(pr4, "BENCH_PR4.json")
+    write_bench_json(pr8, "BENCH_PR8.json", config={"fast": False})
     write_bench_json(obs, "BENCH_OBS.json", config={"fast": False})
 
 

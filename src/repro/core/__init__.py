@@ -14,24 +14,26 @@ Layers (bottom-up):
 * ``optimal``     — §10.1 exact reference for tiny instances
 """
 
-from .network import NetworkState, Timeline, Transfer, gbps, mb
+from .network import LossSchedule, NetworkState, Timeline, Transfer, gbps, mb
 from .ordering import Update, OrderingResult, assign_deadlines, order_updates
 from .aggregation import AggregationResult, aggregate_updates, plan_distribution
 from .replication import (ReplicationResult, ReplicationState,
                           divergence_bound, plan_replication)
 from .delay import DelayTracker, adadelay_lr, bounded_delay_lr, convergence_bound
 from .scheduler import BatchPlan, MLfabricScheduler, SchedulerConfig
-from .scenario import (AggregatorFail, BandwidthTrace, MonitorLagChange,
-                       ReplicaPromote, Scenario, ScenarioEvent, ServerFail,
-                       WorkerJoin, WorkerLeave, bandwidth_trace)
+from .scenario import (AggregatorFail, BandwidthTrace, LinkDegrade,
+                       MonitorLagChange, PacketLoss, ReplicaPromote, Scenario,
+                       ScenarioEvent, ServerFail, WorkerJoin, WorkerLeave,
+                       bandwidth_trace)
 from .simulator import (BandwidthModel, ClusterSim, CommitRecord, SimResult,
-                        StragglerModel, C1, C2, C3, N1, N2, N3, N_STATIC)
+                        StragglerModel, TransportConfig,
+                        C1, C2, C3, N1, N2, N3, N_STATIC)
 from .baselines import (FairShareAsync, SyncSim, max_min_rates,
                         ring_allreduce_time, tree_allreduce_time)
 from .optimal import brute_force_schedule
 
 __all__ = [
-    "NetworkState", "Timeline", "Transfer", "gbps", "mb",
+    "LossSchedule", "NetworkState", "Timeline", "Transfer", "gbps", "mb",
     "Update", "OrderingResult", "assign_deadlines", "order_updates",
     "AggregationResult", "aggregate_updates", "plan_distribution",
     "ReplicationResult", "ReplicationState", "divergence_bound",
@@ -40,9 +42,10 @@ __all__ = [
     "BatchPlan", "MLfabricScheduler", "SchedulerConfig",
     "Scenario", "ScenarioEvent", "WorkerJoin", "WorkerLeave",
     "AggregatorFail", "BandwidthTrace", "MonitorLagChange", "ServerFail",
-    "ReplicaPromote", "bandwidth_trace",
+    "ReplicaPromote", "PacketLoss", "LinkDegrade", "bandwidth_trace",
     "BandwidthModel", "ClusterSim", "CommitRecord", "SimResult",
-    "StragglerModel", "C1", "C2", "C3", "N1", "N2", "N3", "N_STATIC",
+    "StragglerModel", "TransportConfig",
+    "C1", "C2", "C3", "N1", "N2", "N3", "N_STATIC",
     "FairShareAsync", "SyncSim", "max_min_rates", "ring_allreduce_time",
     "tree_allreduce_time", "brute_force_schedule",
 ]

@@ -22,9 +22,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from ..obs.metrics import MetricsRegistry
 
 from .network import gbps
-from .scenario import (AggregatorFail, BandwidthTrace, MonitorLagChange,
-                       ReplicaPromote, Scenario, ScenarioEvent, ServerFail,
-                       WorkerJoin, WorkerLeave)
+from .scenario import (AggregatorFail, BandwidthTrace, LinkDegrade,
+                       MonitorLagChange, PacketLoss, ReplicaPromote, Scenario,
+                       ScenarioEvent, ServerFail, WorkerJoin, WorkerLeave)
 from .simulator import BandwidthModel, CommitRecord, N_STATIC, SimResult, StragglerModel, C1
 
 
@@ -174,8 +174,10 @@ class FairShareAsync:
                     (t + self.restore_time
                      + self.compute_time * self.straggler.sample(self.rng), w))
             self.result.recovery_time = self.restore_time + (t - last_ckpt)
-        elif isinstance(ev, (AggregatorFail, MonitorLagChange, ReplicaPromote)):
-            pass  # vanilla async: no aggregators, no monitor, no replica
+        elif isinstance(ev, (AggregatorFail, MonitorLagChange, ReplicaPromote,
+                             PacketLoss, LinkDegrade)):
+            pass  # vanilla async: no aggregators, no monitor, no replica;
+                  # loss events replay as ideal links (no transport tier)
         else:
             raise TypeError(f"unknown scenario event {ev!r}")
         self.result.scenario_events_applied += 1

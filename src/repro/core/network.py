@@ -744,6 +744,153 @@ class NetworkOverlay(NetworkState):
 
 
 # --------------------------------------------------------------------------- #
+# lossy links (DESIGN.md §12)
+# --------------------------------------------------------------------------- #
+class LossSchedule:
+    """Per-host, per-direction byte-loss rates over time.
+
+    Kept *separate* from :class:`NetworkState` on purpose: loss does not
+    change link capacity (dropped bytes still consumed bandwidth), it
+    changes how many of the delivered bytes are *useful*.  The schedule
+    holds two families of piecewise-constant rate functions per
+    ``(host, direction)`` link — ``drop`` (bytes vanish) and ``corrupt``
+    (bytes arrive as garbage) — reusing :class:`Timeline` for the
+    bisect-indexed segment storage.  Timelines are created lazily on the
+    first nonzero rate, so an inactive schedule is two empty dicts and
+    every query short-circuits to exactly ``0.0`` (the zero-loss golden
+    guarantee).
+
+    Loss composes along a path like independent Bernoulli thinning: a byte
+    survives ``src``'s uplink with probability ``1 - drop_up`` and
+    ``dst``'s downlink with ``1 - drop_down``; corruption applies to the
+    bytes that survived the drop stage.  All queries are deterministic
+    expected-value ("fluid") quantities — the simulator never flips a coin
+    per packet, which keeps seeded runs reproducible and costs zero draws
+    from the simulation RNG.
+    """
+
+    def __init__(self) -> None:
+        self._drop: Dict[Tuple[str, str], Timeline] = {}
+        self._corrupt: Dict[Tuple[str, str], Timeline] = {}
+
+    @property
+    def active(self) -> bool:
+        return bool(self._drop or self._corrupt)
+
+    # -- mutation -------------------------------------------------------- #
+    @staticmethod
+    def _set(table: Dict[Tuple[str, str], Timeline], host: str, t: float,
+             rate: float, until: Optional[float], direction: str) -> None:
+        if not (0.0 <= rate < 1.0):
+            raise ValueError(f"loss rate must be in [0, 1): {rate}")
+        dirs = ("up", "down") if direction == "both" else (direction,)
+        for d in dirs:
+            tl = table.get((host, d))
+            if tl is None:
+                if rate == 0.0 and until is None:
+                    continue    # clearing a link that was never lossy
+                tl = table[(host, d)] = Timeline(0.0)
+            # a window is two future-rate edicts; a later set_rate_from at
+            # t' < until truncates the window — the newest event wins
+            tl.set_rate_from(t, rate)
+            if until is not None:
+                tl.set_rate_from(until, 0.0)
+
+    def set_drop(self, host: str, t: float, rate: float, *,
+                 until: Optional[float] = None,
+                 direction: str = "both") -> None:
+        self._set(self._drop, host, t, rate, until, direction)
+
+    def set_corrupt(self, host: str, t: float, rate: float, *,
+                    until: Optional[float] = None,
+                    direction: str = "both") -> None:
+        self._set(self._corrupt, host, t, rate, until, direction)
+
+    def remove_host(self, host: str) -> None:
+        for table in (self._drop, self._corrupt):
+            table.pop((host, "up"), None)
+            table.pop((host, "down"), None)
+
+    def compact(self, t_now: float) -> None:
+        for table in (self._drop, self._corrupt):
+            for tl in table.values():
+                tl.forget_before(t_now)
+
+    # -- queries --------------------------------------------------------- #
+    def _links(self, table: Dict[Tuple[str, str], Timeline], src: str,
+               dst: str) -> List[Timeline]:
+        links = []
+        tl = table.get((src, "up"))
+        if tl is not None:
+            links.append(tl)
+        tl = table.get((dst, "down"))
+        if tl is not None:
+            links.append(tl)
+        return links
+
+    @staticmethod
+    def _path_rate(rates: Sequence[float]) -> float:
+        """Combine per-link loss rates: 1 - prod(1 - r)."""
+        keep = 1.0
+        for r in rates:
+            keep *= 1.0 - r
+        return 1.0 - keep
+
+    def instant_loss(self, src: str, dst: str, t: float) -> Tuple[float, float]:
+        """``(drop, corrupt)`` path loss rates at instant ``t``."""
+        if src == dst or not self.active:
+            return 0.0, 0.0
+        drop = self._path_rate(
+            [tl.rate_at(t) for tl in self._links(self._drop, src, dst)])
+        corrupt = self._path_rate(
+            [tl.rate_at(t) for tl in self._links(self._corrupt, src, dst)])
+        return drop, corrupt
+
+    def transfer_loss(self, src: str, dst: str,
+                      profile: Profile) -> Tuple[float, float]:
+        """Byte-weighted ``(dropped, corrupted)`` fractions of a transfer.
+
+        Walks the transfer's reserved profile chunks against the loss
+        timelines (merged-breakpoint walk, like the path-bottleneck walk).
+        A byte is *dropped* with the path drop rate; *corrupted* only if it
+        survived the drop stage.  Returns exact ``(0.0, 0.0)`` when no
+        loss timeline touches the path.
+        """
+        if src == dst or not self.active:
+            return 0.0, 0.0
+        dls = self._links(self._drop, src, dst)
+        cls_ = self._links(self._corrupt, src, dst)
+        if not dls and not cls_:
+            return 0.0, 0.0
+        size = profile.size
+        if size <= 0.0:
+            return 0.0, 0.0
+        tls = dls + cls_
+        nd = len(dls)
+        dropped = corrupted = 0.0
+        for t0, t1, r in profile.chunks:
+            if t1 <= t0 or r <= 0.0:
+                continue
+            iters = [tl.segments(t0) for tl in tls]
+            cur = [next(it) for it in iters]
+            t = t0
+            while t < t1:
+                t_next = min(min(c[1] for c in cur), t1)
+                p_drop = self._path_rate([c[2] for c in cur[:nd]])
+                p_corr = self._path_rate([c[2] for c in cur[nd:]])
+                chunk = r * (t_next - t)
+                dropped += chunk * p_drop
+                corrupted += chunk * (1.0 - p_drop) * p_corr
+                if t_next >= t1:
+                    break
+                t = t_next
+                for k, c in enumerate(cur):
+                    if c[1] <= t_next:
+                        cur[k] = next(iters[k])
+        return dropped / size, corrupted / size
+
+
+# --------------------------------------------------------------------------- #
 # unit helpers
 # --------------------------------------------------------------------------- #
 def gbps(x: float) -> float:

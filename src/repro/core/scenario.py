@@ -33,6 +33,17 @@ Event semantics (see DESIGN.md §7 for the full re-plan story):
                       event if the timeline carries one).
 * ``ReplicaPromote``— explicitly promote the replica to primary (split
                       from ``ServerFail`` to model detection/failover lag).
+* ``PacketLoss``    — the host's NIC starts *dropping* a fraction ``rate``
+                      of the bytes it sends/receives (``direction``), until
+                      ``until`` (or indefinitely).  How the cluster reacts
+                      is the transport policy's business (DESIGN.md §12):
+                      retransmit on residual capacity, or accept the loss
+                      via sparsification + error feedback.
+* ``LinkDegrade``   — the host's NIC starts *corrupting* a fraction
+                      ``corrupt_rate`` of bytes.  Corrupt bytes are garbage
+                      (failed checksum), not a sparse subset of gradient
+                      coordinates, so even the bounded-loss transport must
+                      repair them.
 
 Times are seconds on the simulator clock; ``ElasticSession.run_scenario``
 reinterprets them as step indices (its "clock" is the step counter).
@@ -114,6 +125,54 @@ class ReplicaPromote(ScenarioEvent):
     replica: str = ""
 
 
+@dataclass(frozen=True)
+class PacketLoss(ScenarioEvent):
+    """``host``'s links start dropping a fraction ``rate`` of bytes at
+    ``time``; the loss clears at ``until`` (``None`` = until further
+    notice — a later ``PacketLoss(rate=0.0)`` also clears it).
+
+    ``direction`` selects the lossy side: ``"up"`` (bytes the host sends),
+    ``"down"`` (bytes it receives) or ``"both"``.  ``rate`` must be in
+    ``[0, 1)`` — a rate of 1.0 would make every transfer unfinishable.
+    """
+
+    host: str = ""
+    rate: float = 0.0
+    until: Optional[float] = None
+    direction: str = "both"
+
+    def __post_init__(self) -> None:
+        if not (0.0 <= self.rate < 1.0):
+            raise ValueError(f"loss rate must be in [0, 1): {self.rate}")
+        if self.direction not in ("up", "down", "both"):
+            raise ValueError(f"direction must be up/down/both: {self.direction}")
+        if self.until is not None and self.until < self.time:
+            raise ValueError(f"until {self.until} precedes time {self.time}")
+
+
+@dataclass(frozen=True)
+class LinkDegrade(ScenarioEvent):
+    """``host``'s links start corrupting a fraction ``corrupt_rate`` of
+    bytes at ``time`` (cleared at ``until``).  Corruption differs from
+    ``PacketLoss`` in how the bounded-loss transport treats it: corrupt
+    bytes are always retransmitted (they carry no usable information),
+    whereas dropped bytes may be absorbed by error feedback."""
+
+    host: str = ""
+    corrupt_rate: float = 0.0
+    until: Optional[float] = None
+    direction: str = "both"
+
+    def __post_init__(self) -> None:
+        if not (0.0 <= self.corrupt_rate < 1.0):
+            raise ValueError(
+                f"corrupt rate must be in [0, 1): {self.corrupt_rate}")
+        if self.direction not in ("up", "down", "both"):
+            raise ValueError(f"direction must be up/down/both: {self.direction}")
+        if self.until is not None and self.until < self.time:
+            raise ValueError(f"until {self.until} precedes time {self.time}")
+
+
 def bandwidth_trace(host: str,
                     points: Iterable[Tuple[float, float, float]],
                     ) -> List[BandwidthTrace]:
@@ -165,5 +224,5 @@ class Scenario:
 __all__ = [
     "Scenario", "ScenarioEvent", "WorkerJoin", "WorkerLeave",
     "AggregatorFail", "BandwidthTrace", "MonitorLagChange", "ServerFail",
-    "ReplicaPromote", "bandwidth_trace",
+    "ReplicaPromote", "PacketLoss", "LinkDegrade", "bandwidth_trace",
 ]

@@ -43,17 +43,17 @@ import itertools
 import math
 import random
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..obs.metrics import MetricsRegistry
 from .aggregation import AggregationResult, aggregate_updates
 from .delay import DelayTracker
 from .harness import HookBus, NULL_BUS
-from .network import NetworkState, gbps, mb
+from .network import LossSchedule, NetworkState, Transfer, gbps, mb
 from .ordering import Update
-from .scenario import (AggregatorFail, BandwidthTrace, MonitorLagChange,
-                       ReplicaPromote, Scenario, ScenarioEvent, ServerFail,
-                       WorkerJoin, WorkerLeave)
+from .scenario import (AggregatorFail, BandwidthTrace, LinkDegrade,
+                       MonitorLagChange, PacketLoss, ReplicaPromote, Scenario,
+                       ScenarioEvent, ServerFail, WorkerJoin, WorkerLeave)
 from .scheduler import BatchPlan, MLfabricScheduler, SchedulerConfig
 
 
@@ -114,6 +114,72 @@ N_STATIC = BandwidthModel(probs=(0.0, 0.0, 0.0, 0.0, 1.0))
 
 
 # --------------------------------------------------------------------------- #
+# transport policy (DESIGN.md §12)
+# --------------------------------------------------------------------------- #
+@dataclass
+class TransportConfig:
+    """How the cluster reacts to ``PacketLoss``/``LinkDegrade`` link faults.
+
+    ``policy``:
+
+    * ``"lossless"`` — ideal links: loss is *measured* (byte counters) but
+      never repaired; commits proceed as if every byte arrived.  The bench
+      baseline (and the semantics of ``transport=None``, minus counters).
+    * ``"reliable"`` — lost and corrupt chunks are detected at the receiver
+      and retransmitted on the sender's residual ``Timeline`` capacity with
+      exponential backoff, up to ``max_retries`` rounds and a per-transfer
+      ``deadline``; a transfer that exhausts either is failed and its
+      update dropped (the worker recomputes, as for a scenario drop).
+    * ``"bounded"`` — bounded-loss degradation: *dropped* gradient bytes up
+      to the allowed fraction are absorbed by top-k + error feedback
+      (``repro.dist.flatbuf.ErrorFeedback``) and never retransmitted; only
+      the excess over the allowance — and ALL corrupt bytes, which carry no
+      usable coordinates — is repaired as in ``"reliable"``.
+
+    The allowed drop fraction is ``phase_policy.allowed_loss()`` when a
+    phase-aware policy object is attached (see
+    ``repro.dist.policy.PhaseLossPolicy``), else the static
+    ``loss_tolerance``.  ``inflate_sjf`` feeds the expected repair traffic
+    back into Alg. 2/3 planning: the scheduler sees loss-inflated job
+    sizes (capped at ``max_inflation``) computed from the *lagged* loss
+    view, mirroring how bandwidth reaches it through the monitor.
+    """
+
+    policy: str = "reliable"
+    backoff_base: float = 0.05
+    backoff_factor: float = 2.0
+    max_retries: int = 8
+    deadline: float = math.inf
+    tolerance_bytes: float = 1500.0      # residual below one MTU: delivered
+    loss_tolerance: float = 0.0
+    phase_policy: Optional[Any] = None   # duck-typed: .allowed_loss()
+    inflate_sjf: bool = True
+    max_inflation: float = 4.0
+
+    def __post_init__(self) -> None:
+        if self.policy not in ("lossless", "reliable", "bounded"):
+            raise ValueError(f"unknown transport policy {self.policy!r}")
+
+    def allowed_loss(self) -> float:
+        if self.phase_policy is not None:
+            return float(self.phase_policy.allowed_loss())
+        return self.loss_tolerance
+
+    def repair_fraction(self, drop: float, corrupt: float) -> float:
+        """Fraction of a transfer's bytes this policy must retransmit.
+
+        ``drop``/``corrupt`` are byte fractions of the whole transfer
+        (``LossSchedule.transfer_loss`` already charges corruption only to
+        bytes that survived the drop stage, so the two are disjoint).
+        """
+        if self.policy == "lossless":
+            return 0.0
+        if self.policy == "reliable":
+            return drop + corrupt
+        return max(0.0, drop - self.allowed_loss()) + corrupt
+
+
+# --------------------------------------------------------------------------- #
 # simulation records
 # --------------------------------------------------------------------------- #
 @dataclass
@@ -152,6 +218,11 @@ _COUNTER_METRICS: Dict[str, str] = {
     "regen_pending": "failover/regen_pending",   # confiscated for regen
     "regenerated": "failover/regenerated",  # gap + regen-list at promotion
     "rolled_back": "failover/rolled_back",  # checkpoint-restore baselines
+    # bounded-loss transport tier (DESIGN.md §12):
+    "transport_loss_events": "transport/loss_events",  # lossy-link edicts
+    "retransmits": "transport/retransmits",    # repair rounds reserved
+    "transport_timeouts": "transport/timeouts",  # gave up: deadline passed
+    "transport_expired": "transport/expired",    # gave up: retries exhausted
 }
 
 _RECOVERY_METRIC = "failover/recovery_time"
@@ -255,6 +326,7 @@ class ClusterSim:
         hooks: Optional[HookBus] = None,
         plan_repair: bool = False,
         vector_compute: bool = False,
+        transport: Optional[TransportConfig] = None,
     ):
         self.n_workers = n_workers
         self.workers = [f"worker{i}" for i in range(n_workers)]
@@ -298,6 +370,17 @@ class ClusterSim:
             hosts.append(self.cfg.replica)
         self.net_actual = NetworkState(hosts, default_bw)
         self.net_lagged = NetworkState(hosts, default_bw)
+
+        # bounded-loss transport tier (DESIGN.md §12).  ``loss_actual``
+        # carries the true link loss rates; ``loss_lagged`` is what the
+        # monitor has reported so far (SJF size inflation plans on it).
+        # Both stay empty — and every query exactly 0.0 — until a
+        # PacketLoss/LinkDegrade event fires, so a loss-free run takes the
+        # identical code path regardless of ``transport`` (the zero-loss
+        # golden guarantee: zero extra RNG draws, zero trace deltas).
+        self.transport = transport
+        self.loss_actual = LossSchedule()
+        self.loss_lagged = LossSchedule()
 
         # Live aggregator roster: the scheduler reads ``cfg.aggregators`` on
         # every batch, so aliasing the list makes topology changes take
@@ -402,6 +485,25 @@ class ClusterSim:
                                  host=ev.host, up=ev.up, down=ev.down)
         elif isinstance(ev, MonitorLagChange):
             self.monitor_lag = ev.lag
+        elif isinstance(ev, PacketLoss):
+            if ev.host in self.net_actual.up and ev.host not in self._dead:
+                self.loss_actual.set_drop(ev.host, t, ev.rate,
+                                          until=ev.until,
+                                          direction=ev.direction)
+                self.result.transport_loss_events += 1
+                self._push_event(t + self.monitor_lag, "loss_report",
+                                 host=ev.host, drop=ev.rate, corrupt=None,
+                                 until=ev.until, direction=ev.direction)
+        elif isinstance(ev, LinkDegrade):
+            if ev.host in self.net_actual.up and ev.host not in self._dead:
+                self.loss_actual.set_corrupt(ev.host, t, ev.corrupt_rate,
+                                             until=ev.until,
+                                             direction=ev.direction)
+                self.result.transport_loss_events += 1
+                self._push_event(t + self.monitor_lag, "loss_report",
+                                 host=ev.host, drop=None,
+                                 corrupt=ev.corrupt_rate,
+                                 until=ev.until, direction=ev.direction)
         elif isinstance(ev, ServerFail):
             self._apply_server_fail(t, ev.server or self.cfg.server)
         elif isinstance(ev, ReplicaPromote):
@@ -494,6 +596,8 @@ class ClusterSim:
                     t, info["transfer"],
                     refund_server=size if direct else 0.0,
                     refund_network=size)
+                self._release_chain(t, info.get("xmit_chain", ()),
+                                    to_server=direct)
                 if self.cfg.replica is not None:
                     self._confiscate(uid)
                 else:
@@ -534,6 +638,8 @@ class ClusterSim:
         # NIC's timelines would otherwise live in every copy() forever
         for net in (self.net_actual, self.net_lagged):
             net.remove_host(worker)
+        self.loss_actual.remove_host(worker)
+        self.loss_lagged.remove_host(worker)
 
     def _apply_aggregator_fail(self, t: float, host: str) -> None:
         if host in self.aggregators:
@@ -552,12 +658,16 @@ class ClusterSim:
                 del self._inflight[uid]
                 self._release_unfinished(t, info["transfer"],
                                          refund_network=info["update"].size)
+                self._release_chain(t, info.get("xmit_chain", ()),
+                                    to_server=False)
                 agg_tr = info.get("agg_transfer")
                 if agg_tr is not None and agg_tr.uid not in released_aggregates:
                     released_aggregates.add(agg_tr.uid)
                     self._release_unfinished(t, agg_tr,
                                              refund_server=agg_tr.size,
                                              refund_network=agg_tr.size)
+                    self._release_chain(t, info.get("agg_chain", ()),
+                                        to_server=True)
                 u: Update = info["update"]
                 u.t_avail = t
                 rerouted.append(u)
@@ -600,6 +710,8 @@ class ClusterSim:
         self.trace.instant("repair", cat="scenario", track="scenario", ts=t,
                            args={"updates": len(order)})
         for u in order:
+            if u.uid not in commit:
+                continue    # transport gave up on it (reliable-mode fail)
             self._push_event(commit[u.uid], "commit", uid=u.uid,
                              epoch=self._commit_epoch.get(u.uid, 0),
                              aggregated=agg.assignment.get(u.uid, 0) != 0)
@@ -681,11 +793,15 @@ class ClusterSim:
             self._release_unfinished(t, info["transfer"],
                                      refund_server=size if direct else 0.0,
                                      refund_network=size)
+            self._release_chain(t, info.get("xmit_chain", ()),
+                                to_server=direct)
             agg_tr = info.get("agg_transfer")
             if agg_tr is not None and agg_tr.uid not in released_aggregates:
                 released_aggregates.add(agg_tr.uid)
                 self._release_unfinished(t, agg_tr, refund_server=agg_tr.size,
                                          refund_network=agg_tr.size)
+                self._release_chain(t, info.get("agg_chain", ()),
+                                    to_server=True)
             self._confiscate(uid)
         self._inflight.clear()
         # pending updates targeted the dead server -> regenerate-list
@@ -803,6 +919,23 @@ class ClusterSim:
             return  # departed before the report landed
         self.net_lagged.set_bandwidth(host, t, up=up, down=down)
 
+    def _on_loss_report(self, t: float, host: str, drop: Optional[float],
+                        corrupt: Optional[float], until: Optional[float],
+                        direction: str) -> None:
+        """Loss rates reach the scheduler's view monitor-lagged, exactly
+        like bandwidth.  A window that closed before the report landed is
+        stale news and never enters the lagged view."""
+        if host in self._dead:
+            return
+        if until is not None and until <= t:
+            return
+        if drop is not None:
+            self.loss_lagged.set_drop(host, t, drop, until=until,
+                                      direction=direction)
+        if corrupt is not None:
+            self.loss_lagged.set_corrupt(host, t, corrupt, until=until,
+                                         direction=direction)
+
     def _on_batch(self, t: float) -> None:
         self._push_event(t + self.cfg.batch_interval, "batch")
         # every planner/enact query clamps to max(t_avail, t_now), so
@@ -810,6 +943,8 @@ class ClusterSim:
         # long churn scenarios grow every Timeline without bound
         self.net_actual.compact(t)
         self.net_lagged.compact(t)
+        self.loss_actual.compact(t)
+        self.loss_lagged.compact(t)
         if self._server_failed:
             # primary down, replica not yet promoted: nothing can be
             # planned (the batch clock keeps ticking so scheduling resumes
@@ -832,10 +967,30 @@ class ClusterSim:
                                   {"t": t, "updates": len(batch)})
         import time as _time
         w0 = _time.perf_counter()
+        # Alg. 2/3 feedback: under an active transport, SJF plans on
+        # loss-inflated job sizes (expected total bytes including repair
+        # rounds, from the monitor-lagged loss view).  Sizes are mutated in
+        # place and restored bit-exact after planning — the plan holds the
+        # same mutable Update objects, so enactment and replication see the
+        # true sizes, and the planner's overlay reservations are discarded
+        # with the overlay anyway.
+        inflate = (self.transport is not None and self.transport.inflate_sjf
+                   and self.loss_lagged.active)
+        if inflate:
+            orig_sizes = [(u, u.size) for u in batch]
+            gauge = self.result.metrics.gauge
+            for u in batch:
+                u.size *= self._inflation_factor(u.worker, t)
+            if self.transport.policy == "bounded":
+                gauge("transport/allowed_loss").set(
+                    self.transport.allowed_loss())
         # the scheduler plans entirely on copy-on-write overlays, so the
         # lagged view is passed by reference — the old per-batch deep copy
         # was O(hosts) and dominated planning cost at U=4096
         plan = self.scheduler.schedule_batch(batch, self.net_lagged, t_now=t)
+        if inflate:
+            for u, s in orig_sizes:
+                u.size = s
         self.result.scheduler_wall_time += _time.perf_counter() - w0
         self.result.scheduler_batches += 1
         # sim-time only in the trace: planner wall-clock goes to metrics, so
@@ -872,6 +1027,8 @@ class ClusterSim:
                     commit_times[uid] = t_catchup
 
         for g in plan.order:
+            if g.uid not in commit_times:
+                continue    # transport gave up on it (reliable-mode fail)
             self._push_event(commit_times[g.uid], "commit", uid=g.uid,
                              epoch=self._commit_epoch.get(g.uid, 0),
                              aggregated=plan.aggregation.assignment.get(g.uid, 0) != 0)
@@ -891,53 +1048,199 @@ class ClusterSim:
         """
         commit: Dict[int, float] = {}
         server = self.cfg.server
+        failed: List[Tuple[int, float]] = []
         for grp in agg.groups:
             if grp.aggregator is None:
                 for g in grp.members:
-                    tr = self.net_actual.reserve(g.worker, server, g.size,
-                                                 max(g.t_avail, t_now))
-                    commit[g.uid] = tr.t_end
+                    tr, t_done, chain, ok = self._deliver(
+                        g.worker, server, g.size, max(g.t_avail, t_now),
+                        uid=g.uid, kind="direct", to_server=True)
                     self.result.bytes_to_server += g.size
                     self.result.bytes_in_network += g.size
                     self._inflight[g.uid] = {"update": g, "aggregator": None,
-                                             "transfer": tr}
+                                             "transfer": tr,
+                                             "xmit_chain": chain}
                     self.trace.span(f"{g.worker}->{server}", cat="transfer",
                                     track=g.worker, ts=tr.t_start,
                                     dur=tr.t_end - tr.t_start,
                                     args={"uid": g.uid, "bytes": g.size,
                                           "kind": "direct"})
+                    if ok:
+                        commit[g.uid] = t_done
+                    else:
+                        failed.append((g.uid, t_done))
             else:
                 t_ready = t_now
                 agg_size = 0.0
+                ok_members = []
                 for g in grp.members:
-                    tr = self.net_actual.reserve(g.worker, grp.aggregator,
-                                                 g.size, max(g.t_avail, t_now))
-                    t_ready = max(t_ready, tr.t_end)
-                    agg_size = max(agg_size, g.size)
+                    tr, t_done, chain, ok = self._deliver(
+                        g.worker, grp.aggregator, g.size,
+                        max(g.t_avail, t_now),
+                        uid=g.uid, kind="member", to_server=False)
                     self.result.bytes_in_network += g.size
                     self._inflight[g.uid] = {"update": g,
                                              "aggregator": grp.aggregator,
-                                             "transfer": tr}
+                                             "transfer": tr,
+                                             "xmit_chain": chain}
                     self.trace.span(f"{g.worker}->{grp.aggregator}",
                                     cat="transfer", track=g.worker,
                                     ts=tr.t_start, dur=tr.t_end - tr.t_start,
                                     args={"uid": g.uid, "bytes": g.size,
                                           "kind": "member"})
-                if grp.members:
-                    tr = self.net_actual.reserve(grp.aggregator, server,
-                                                 agg_size, t_ready)
+                    if ok:
+                        t_ready = max(t_ready, t_done)
+                        agg_size = max(agg_size, g.size)
+                        ok_members.append(g)
+                    else:
+                        failed.append((g.uid, t_done))
+                if ok_members:
+                    tr, t_done, chain, ok = self._deliver(
+                        grp.aggregator, server, agg_size, t_ready,
+                        uid=None, kind="aggregate", to_server=True)
                     self.result.bytes_to_server += agg_size
                     self.result.bytes_in_network += agg_size
-                    for g in grp.members:
-                        commit[g.uid] = tr.t_end
+                    for g in ok_members:
                         self._inflight[g.uid]["agg_transfer"] = tr
+                        self._inflight[g.uid]["agg_chain"] = chain
+                        if ok:
+                            commit[g.uid] = t_done
+                        else:
+                            failed.append((g.uid, t_done))
                     self.trace.span(
-                        f"{grp.aggregator}->{server} (x{len(grp.members)})",
+                        f"{grp.aggregator}->{server} (x{len(ok_members)})",
                         cat="aggregate", track=grp.aggregator,
                         ts=tr.t_start, dur=tr.t_end - tr.t_start,
-                        args={"members": sorted(g.uid for g in grp.members),
+                        args={"members": sorted(g.uid for g in ok_members),
                               "bytes": agg_size})
+        for uid, t_fail in failed:
+            self._push_event(t_fail, "transport_fail", uid=uid)
         return commit
+
+    def _deliver(self, src: str, dst: str, size: float, t_avail: float, *,
+                 uid: Optional[int], kind: str,
+                 to_server: bool) -> Tuple[Transfer, float, List[Transfer], bool]:
+        """Reserve one payload transfer plus any transport repair rounds.
+
+        Returns ``(tr, t_done, chain, ok)``: the principal reservation, the
+        time the payload is *usefully* complete (last repair round landed),
+        the list of repair-round reservations, and whether the transport
+        succeeded.  With no transport configured, or while no loss timeline
+        exists, this is byte-for-byte the pre-transport reserve path — one
+        ``reserve`` call, ``t_done == tr.t_end`` — which is what keeps a
+        zero-loss run golden-identical.
+
+        Repair rounds (``"reliable"``, or ``"bounded"`` excess/corruption)
+        ride the sender's *residual* capacity: the principal reservation is
+        already booked, so each round is a fresh greedy profile over
+        whatever the schedule left, ``backoff_base * backoff_factor^k``
+        after the previous round finished.  Rounds themselves are repaired
+        to completion (the receiver knows exactly which chunks are still
+        missing), shrinking the residual geometrically; below
+        ``tolerance_bytes`` the transfer counts as delivered.  Charges to
+        ``bytes_in_network`` (and ``bytes_to_server`` for server-bound
+        hops) match the refunds in the cancellation paths.
+        """
+        tr = self.net_actual.reserve(src, dst, size, t_avail)
+        tc = self.transport
+        if tc is None or not self.loss_actual.active:
+            return tr, tr.t_end, [], True
+        drop, corrupt = self.loss_actual.transfer_loss(src, dst, tr.profile)
+        if drop <= 0.0 and corrupt <= 0.0:
+            return tr, tr.t_end, [], True
+        m = self.result.metrics
+        if drop > 0.0:
+            m.counter("transport/bytes_lost").inc(size * drop)
+        if corrupt > 0.0:
+            m.counter("transport/bytes_corrupted").inc(size * corrupt)
+        if tc.policy == "bounded" and drop > 0.0:
+            accepted = min(drop, tc.allowed_loss())
+            if accepted > 0.0:
+                m.counter("transport/bytes_accepted").inc(size * accepted)
+        remaining = size * tc.repair_fraction(drop, corrupt)
+        if remaining <= tc.tolerance_bytes:
+            return tr, tr.t_end, [], True
+        chain: List[Transfer] = []
+        t_done = tr.t_end
+        deadline = t_avail + tc.deadline
+        backoff = tc.backoff_base
+        rounds = 0
+        while remaining > tc.tolerance_bytes:
+            if rounds >= tc.max_retries:
+                self.result.transport_expired += 1
+                self.trace.instant("transport_expired", cat="transport",
+                                   track=src, ts=t_done,
+                                   args={"uid": uid, "kind": kind,
+                                         "residual": remaining})
+                return tr, t_done, chain, False
+            t_retry = t_done + backoff
+            if t_retry > deadline:
+                self.result.transport_timeouts += 1
+                self.trace.instant("transport_timeout", cat="transport",
+                                   track=src, ts=t_done,
+                                   args={"uid": uid, "kind": kind,
+                                         "residual": remaining})
+                return tr, t_done, chain, False
+            rtr = self.net_actual.reserve(src, dst, remaining, t_retry)
+            chain.append(rtr)
+            self.result.retransmits += 1
+            m.counter("transport/bytes_retransmitted").inc(remaining)
+            self.result.bytes_in_network += remaining
+            if to_server:
+                self.result.bytes_to_server += remaining
+            self.trace.span(f"retry{rounds + 1} {src}->{dst}",
+                            cat="transport", track=src, ts=rtr.t_start,
+                            dur=rtr.t_end - rtr.t_start,
+                            args={"uid": uid, "kind": kind,
+                                  "bytes": remaining, "backoff": backoff})
+            d2, c2 = self.loss_actual.transfer_loss(src, dst, rtr.profile)
+            if d2 > 0.0:
+                m.counter("transport/bytes_lost").inc(remaining * d2)
+            if c2 > 0.0:
+                m.counter("transport/bytes_corrupted").inc(remaining * c2)
+            remaining *= d2 + c2    # repair rounds must land fully
+            t_done = rtr.t_end
+            backoff *= tc.backoff_factor
+            rounds += 1
+        return tr, t_done, chain, True
+
+    def _inflation_factor(self, worker: str, t: float) -> float:
+        """Expected total-bytes multiplier for SJF planning: geometric sum
+        of repair rounds, ``1 / (1 - p_repair)``, from the lagged loss
+        view of the worker->server path (capped at ``max_inflation``)."""
+        tc = self.transport
+        drop, corrupt = self.loss_lagged.instant_loss(worker, self.cfg.server, t)
+        p = tc.repair_fraction(drop, (1.0 - drop) * corrupt)
+        if p <= 0.0:
+            return 1.0
+        if p >= 1.0:
+            return tc.max_inflation
+        return min(1.0 / (1.0 - p), tc.max_inflation)
+
+    def _release_chain(self, t: float, chain, *, to_server: bool) -> None:
+        """Free a cancelled delivery's unfinished repair-round reservations
+        (mirrors the per-round charges in :meth:`_deliver`)."""
+        for ctr in chain:
+            self._release_unfinished(
+                t, ctr, refund_server=ctr.size if to_server else 0.0,
+                refund_network=ctr.size)
+
+    def _on_transport_fail(self, t: float, uid: int) -> None:
+        """The transport gave up on ``uid`` (deadline or retries): the
+        update is dropped and its worker recomputes — same recovery as a
+        scenario drop, separately counted.  A uid already cancelled by a
+        topology event (leave/failover) arrives here with no metadata and
+        is a no-op."""
+        self._inflight.pop(uid, None)
+        meta = self._uid_meta.pop(uid, None)
+        if meta is None:
+            return
+        self._cancel_commit(uid)
+        self.result.record_scenario_drop()
+        if self.on_drop:
+            self.on_drop(meta["worker"], meta["version"])
+        if meta["worker"] not in self._dead:
+            self._schedule_compute(meta["worker"], t)
 
     def _enact_replica(self, rep, t_now: float) -> float:
         """Enact this batch's frozen replica copies on the actual network.

@@ -60,18 +60,49 @@ class ShardedBatchIterator:
     def _worker(self):
         while not self._stop.is_set():
             batch = self.pipeline.next_batch()
+            # Blocking backpressure: keep retrying the bounded queue until
+            # the consumer drains a slot or shutdown is requested.  The
+            # short timeout only exists to re-check the stop flag — it must
+            # never discard the batch.
             while not self._stop.is_set():
                 try:
                     self._q.put(batch, timeout=0.1)
+                    batch = None
                     break
                 except queue.Full:
                     continue
+            if batch is not None:
+                # Shutdown interrupted an undelivered batch: rewind the
+                # cursor so checkpointed progress matches what was actually
+                # handed to the consumer (otherwise restart-from-checkpoint
+                # silently skips this batch).
+                self.pipeline.cursor -= 1
 
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
         return self
 
     def __next__(self) -> Dict[str, np.ndarray]:
-        return self._q.get()
+        while True:
+            try:
+                return self._q.get(timeout=0.1)
+            except queue.Empty:
+                if self._stop.is_set() and not self._thread.is_alive():
+                    raise StopIteration
 
     def close(self) -> None:
+        """Stop the producer and reconcile the cursor.
+
+        Order matters: set the stop flag, *join* the worker (so no further
+        put can race the drain), then rewind the cursor once per batch
+        still sitting undelivered in the queue.  After close(),
+        ``pipeline.state_dict()`` reflects exactly the batches the consumer
+        received, so a resumed run replays no sample twice and skips none.
+        """
         self._stop.set()
+        self._thread.join(timeout=5.0)
+        while True:
+            try:
+                self._q.get_nowait()
+                self.pipeline.cursor -= 1
+            except queue.Empty:
+                break

@@ -8,7 +8,8 @@ Bridges the ``core/`` control plane (ordering, aggregation, replication
 * ``policy``      — the ``sharding_policy`` context + ``constrain`` hook
   the model forward passes call
 * ``flatbuf``     — flat-bucket layout: one buffer per gradient,
-  zero-copy bucket/leaf views, the int8 flat wire round-trip
+  zero-copy bucket/leaf views, the int8 flat wire round-trip, and the
+  bounded-loss wire format (top-k sparsify + ``ErrorFeedback``)
 * ``collectives`` — ``mlfabric_grad_reduce``: flat-bucketed,
   shortest-first, hierarchical (optionally int8 cross-pod with the fused
   aggregator kernel) gradient reduction in-graph
@@ -17,16 +18,19 @@ Bridges the ``core/`` control plane (ordering, aggregation, replication
 
 from . import collectives, compat, elastic, flatbuf, policy, sharding
 from .collectives import mlfabric_grad_reduce, plan_buckets
-from .flatbuf import FlatLayout, pack_leaves, plan_flat_layout
+from .flatbuf import (ErrorFeedback, FlatLayout, SparseChunk, pack_leaves,
+                      plan_flat_layout, sparse_quantize, topk_sparsify)
 from .compat import AxisType, make_mesh, shard_map
 from .elastic import ElasticSession, surviving_mesh
-from .policy import constrain, sharding_policy
+from .policy import (PhaseLossCallback, PhaseLossPolicy, constrain,
+                     sharding_policy)
 
 __all__ = [
     "collectives", "compat", "elastic", "flatbuf", "policy", "sharding",
     "mlfabric_grad_reduce", "plan_buckets",
-    "FlatLayout", "pack_leaves", "plan_flat_layout",
+    "ErrorFeedback", "FlatLayout", "SparseChunk", "pack_leaves",
+    "plan_flat_layout", "sparse_quantize", "topk_sparsify",
     "AxisType", "make_mesh", "shard_map",
     "ElasticSession", "surviving_mesh",
-    "constrain", "sharding_policy",
+    "PhaseLossCallback", "PhaseLossPolicy", "constrain", "sharding_policy",
 ]

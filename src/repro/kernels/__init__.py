@@ -6,13 +6,17 @@
                            (the aggregator's *receive* path for compressed
                            inter-pod buckets; streams over N in VMEM)
 * ``quantize``           — int8 block quantization (gradient compression)
+* ``scatter_aggregate``  — sparse top-k int8 chunks -> dense scatter-add
+                           + norm (the bounded-loss transport receive path)
 
 Each has: the kernel (pl.pallas_call + BlockSpec), a jit wrapper in
 ``ops.py`` (interpret-mode on CPU), and a pure-jnp oracle in ``ref.py``.
 """
 
 from .ops import (compress_update, dequant_aggregate_op, dequantize_op,
-                  flash_attention_op, grad_aggregate_op, quantize_op)
+                  flash_attention_op, grad_aggregate_op, quantize_op,
+                  scatter_aggregate_op)
 
 __all__ = ["compress_update", "dequant_aggregate_op", "dequantize_op",
-           "flash_attention_op", "grad_aggregate_op", "quantize_op"]
+           "flash_attention_op", "grad_aggregate_op", "quantize_op",
+           "scatter_aggregate_op"]

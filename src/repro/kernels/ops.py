@@ -19,6 +19,7 @@ from .dequant_aggregate import dequant_aggregate as _deq_agg
 from .flash_attention import flash_attention as _flash
 from .grad_aggregate import grad_aggregate as _agg
 from .quantize import dequantize as _dequant, quantize as _quant
+from .scatter_aggregate import scatter_aggregate as _scatter_agg
 
 
 def _on_tpu() -> bool:
@@ -58,6 +59,18 @@ def dequant_aggregate_op(q, scales, weights, *, block: int = 256,
                     interpret=not _on_tpu())
 
 
+@functools.partial(jax.jit, static_argnames=("d_out", "block_d", "k_tile"))
+def scatter_aggregate_op(idx, q, scales, weights, *, d_out: int,
+                         block_d: int = 2048, k_tile: int = 256):
+    """Sparse receive path for bounded-loss transport: scatter-add N top-k
+    int8 chunks (idx [N, K] int32, -1 = dropped slot) into the dense flat
+    bucket + fused ||agg||^2, without materializing a dense [D] buffer per
+    sender."""
+    return _scatter_agg(idx, q, scales, weights, d_out=d_out,
+                        block_d=block_d, k_tile=k_tile,
+                        interpret=not _on_tpu())
+
+
 @functools.partial(jax.jit, static_argnames=("block",))
 def quantize_op(x, *, block: int = 256):
     d = x.shape[0]
@@ -87,3 +100,4 @@ flash_attention_ref = ref.flash_attention_ref
 grad_aggregate_ref = ref.grad_aggregate_ref
 quantize_ref = ref.quantize_ref
 dequantize_ref = ref.dequantize_ref
+scatter_aggregate_ref = ref.scatter_aggregate_ref

@@ -59,6 +59,23 @@ def dequant_aggregate_ref(q: jax.Array, scales: jax.Array,
     return agg, jnp.sum(jnp.square(agg))
 
 
+def scatter_aggregate_ref(idx: jax.Array, q: jax.Array, scales: jax.Array,
+                          weights: jax.Array, *, d_out: int
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Dense scatter-add oracle for the sparse receive path.
+
+    idx: [N, K] int32 (negative or >= d_out -> dropped slot); q: [N, K]
+    int8; scales, weights: [N] -> (agg f32 [d_out], sumsq [] f32).
+    """
+    vals = (q.astype(jnp.float32) * scales[:, None].astype(jnp.float32)
+            * weights[:, None].astype(jnp.float32))
+    valid = (idx >= 0) & (idx < d_out)
+    vals = jnp.where(valid, vals, 0.0)
+    safe = jnp.where(valid, idx, 0)
+    agg = jnp.zeros((d_out,), jnp.float32).at[safe.ravel()].add(vals.ravel())
+    return agg, jnp.sum(jnp.square(agg))
+
+
 def quantize_ref(x: jax.Array, *, block: int = 256
                  ) -> Tuple[jax.Array, jax.Array]:
     """Block-wise symmetric int8 quantization (gradient compression).

@@ -1,0 +1,124 @@
+"""Pallas kernel: sparse int8 chunks -> dense weighted aggregate -> norm.
+
+The bounded-loss transport tier (DESIGN.md §12) ships top-k sparsified,
+int8-quantized gradient chunks: each sender contributes ``(idx, q, scale)``
+— K coordinate positions into the packed flat bucket, their quantized
+values, and one per-chunk scale.  The aggregator must scatter-add every
+surviving chunk into the dense flat buffer.  Doing that with XLA
+``.at[].add`` materializes one dense [D] buffer per sender; this kernel
+builds the aggregate in a single pass with the output tile VMEM-resident,
+mirroring ``dequant_aggregate.py``'s streaming layout.
+
+Grid: ``(D tiles, N senders)`` with the sender axis minor, so each [block_d]
+output tile accumulates all N sparse chunks before moving on.  TPU has no
+efficient in-register scatter, so the scatter is the MXU-idiomatic one-hot
+matmul: positions are compared against a ``broadcasted_iota`` column ramp
+(TPU needs >= 2D iota) and the [K_tile, block_d] one-hot mask contracts
+with the dequantized values on the MXU (``preferred_element_type=f32``).
+Entries with ``idx < 0`` (dropped / padding slots) match no column and
+contribute exactly zero; entries ``>= d_out`` land only in the ragged last
+tile's dead columns, whose output writes the pipeline drops and whose norm
+contribution is masked — so both are safe without a separate mask pass.
+
+The fused ``||agg||^2`` output feeds replication (Table 1) and the
+error-feedback bound accounting for free, like the dense receive path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scatter_kernel(idx_ref, q_ref, s_ref, w_ref, out_ref, ssq_ref, *,
+                    block_d: int, k: int, k_tile: int, d_out: int):
+    i = pl.program_id(0)                       # D tile
+    j = pl.program_id(1)                       # sender (minor: streams)
+    n = pl.num_programs(1)
+
+    idx = idx_ref[...]                         # [1, K] int32
+    q = q_ref[...]                             # [1, K] int8
+    scale = s_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+
+    vals = q.astype(jnp.float32) * (scale * w)          # [1, K]
+    pos = idx - i * block_d                             # [1, K]
+
+    acc = jnp.zeros((1, block_d), jnp.float32)
+    for kt in range(0, k, k_tile):
+        ke = min(kt + k_tile, k)
+        pos_t = pos[:, kt:ke]                           # [1, kt_len] static
+        vals_t = vals[:, kt:ke]
+        ramp = jax.lax.broadcasted_iota(jnp.int32, (ke - kt, block_d), 1)
+        # [kt_len, block_d] one-hot: dropped slots (idx < 0 -> pos < 0)
+        # match no column and scatter nothing
+        onehot = (pos_t.reshape(ke - kt, 1) == ramp).astype(jnp.float32)
+        acc += jnp.dot(vals_t, onehot, preferred_element_type=jnp.float32)
+
+    partial = acc.reshape(block_d)
+
+    @pl.when(j == 0)
+    def _():
+        out_ref[...] = partial
+
+    @pl.when(j > 0)
+    def _():
+        out_ref[...] += partial
+
+    @pl.when(j == n - 1)
+    def _():
+        # ragged D tile: dead columns must not pollute the norm (their
+        # output writes are dropped, but the VMEM tile still holds them)
+        col = (jax.lax.broadcasted_iota(jnp.int32, (1, block_d), 1)
+               .reshape(block_d) + i * block_d)
+        agg = out_ref[...]
+        ssq_ref[0] = jnp.sum(jnp.where(col < d_out, jnp.square(agg), 0.0))
+
+
+def scatter_aggregate(idx: jax.Array, q: jax.Array, scales: jax.Array,
+                      weights: jax.Array, *, d_out: int,
+                      block_d: int = 2048, k_tile: int = 256,
+                      interpret: bool = False
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """idx: [N, K] int32 (-1 = dropped slot); q: [N, K] int8;
+    scales, weights: [N] f32 -> (agg f32 [d_out], sumsq [] f32).
+
+    Duplicate positions (across senders or within one chunk) accumulate,
+    exactly like a dense scatter-add.  ``d_out`` need not be a multiple of
+    ``block_d`` — the ragged tail is handled in-kernel.
+    """
+    n, k = idx.shape
+    assert n >= 1 and k >= 1, (n, k)
+    assert q.shape == (n, k), (q.shape, idx.shape)
+    assert scales.shape == (n,) and weights.shape == (n,), \
+        (scales.shape, weights.shape)
+    block_d = min(block_d, d_out)
+    k_tile = min(k_tile, k)
+    grid = (pl.cdiv(d_out, block_d), n)
+
+    kernel = functools.partial(_scatter_kernel, block_d=block_d, k=k,
+                               k_tile=k_tile, d_out=d_out)
+    agg, ssq = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_d,), lambda i, j: (i,)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d_out,), jnp.float32),
+            jax.ShapeDtypeStruct((grid[0],), jnp.float32),
+        ],
+        interpret=interpret,
+    )(idx, q, scales[:, None], weights[:, None])
+    return agg, jnp.sum(ssq)

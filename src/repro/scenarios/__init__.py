@@ -1,8 +1,9 @@
 """Pre-built dynamic-cluster scenarios (see ``repro.core.scenario``)."""
 
-from .library import (aggregator_outage, churn, congestion_wave,
-                      degraded_monitor, flash_crowd, paper_dynamic_cluster,
-                      server_failover)
+from .library import (aggregator_outage, burst_loss, churn, congestion_loss,
+                      congestion_wave, degraded_monitor, flash_crowd,
+                      paper_dynamic_cluster, server_failover)
 
 __all__ = ["churn", "aggregator_outage", "flash_crowd", "congestion_wave",
-           "degraded_monitor", "server_failover", "paper_dynamic_cluster"]
+           "burst_loss", "congestion_loss", "degraded_monitor",
+           "server_failover", "paper_dynamic_cluster"]

@@ -11,10 +11,10 @@ import random
 from typing import Optional, Sequence
 
 from ..core.network import gbps
-from ..core.scenario import (AggregatorFail, BandwidthTrace, MonitorLagChange,
-                             ReplicaPromote, Scenario, ScenarioEvent,
-                             ServerFail, WorkerJoin, WorkerLeave,
-                             bandwidth_trace)
+from ..core.scenario import (AggregatorFail, BandwidthTrace, LinkDegrade,
+                             MonitorLagChange, PacketLoss, ReplicaPromote,
+                             Scenario, ScenarioEvent, ServerFail, WorkerJoin,
+                             WorkerLeave, bandwidth_trace)
 
 
 def churn(n_workers: int, *, leave_at: float = 5.0, rejoin_at: float = 15.0,
@@ -95,6 +95,45 @@ def server_failover(*, fail_at: float = 5.0,
     return Scenario(events, name=name)
 
 
+def burst_loss(workers: Sequence[str], *, start: float = 2.0,
+               duration: float = 1.5, rate: float = 0.3,
+               interval: float = 4.0, bursts: int = 2,
+               name: str = "burst-loss") -> Scenario:
+    """Periodic loss bursts: every ``interval`` seconds each listed host's
+    links drop ``rate`` of transfer bytes for ``duration`` seconds (a flaky
+    ToR / lossy-tunnel episode).  Windows are explicit ``until`` bounds, so
+    between bursts the fabric is clean."""
+    if bursts < 1:
+        raise ValueError(f"bursts must be >= 1: {bursts}")
+    events: list[ScenarioEvent] = []
+    for b in range(bursts):
+        t0 = start + b * interval
+        events += [PacketLoss(time=t0, host=w, rate=rate, until=t0 + duration)
+                   for w in workers]
+    return Scenario(events, name=name)
+
+
+def congestion_loss(workers: Sequence[str], *, start: float = 3.0,
+                    duration: float = 4.0, rate: float = 0.15,
+                    corrupt_rate: float = 0.05, low=gbps(1), high=gbps(10),
+                    stagger: float = 0.5, name: str = "congestion-loss",
+                    ) -> Scenario:
+    """:func:`congestion_wave` plus its loss signature: while a host's NIC
+    is dipped its queues overflow (``PacketLoss``) and the stressed link
+    corrupts a further fraction of bytes (``LinkDegrade``), both ending
+    with the wave.  Exercises bandwidth *and* loss dynamics together."""
+    events: list[ScenarioEvent] = []
+    for i, w in enumerate(workers):
+        t0 = start + i * stagger
+        t1 = t0 + duration
+        events += bandwidth_trace(w, [(t0, low, low), (t1, high, high)])
+        events.append(PacketLoss(time=t0, host=w, rate=rate, until=t1))
+        if corrupt_rate > 0.0:
+            events.append(LinkDegrade(time=t0, host=w,
+                                      corrupt_rate=corrupt_rate, until=t1))
+    return Scenario(events, name=name)
+
+
 def paper_dynamic_cluster(n_workers: int, *, seed: int = 0,
                           horizon: float = 30.0,
                           name: str = "paper-dynamic-cluster") -> Scenario:
@@ -112,4 +151,5 @@ def paper_dynamic_cluster(n_workers: int, *, seed: int = 0,
 
 
 __all__ = ["churn", "aggregator_outage", "flash_crowd", "congestion_wave",
-           "degraded_monitor", "server_failover", "paper_dynamic_cluster"]
+           "burst_loss", "congestion_loss", "degraded_monitor",
+           "server_failover", "paper_dynamic_cluster"]

@@ -1,0 +1,89 @@
+"""Regression tests for the prefetching data pipeline (ISSUE 8 satellite):
+the bounded prefetch queue must never silently discard a batch, and the
+checkpointable cursor must reflect exactly the batches the consumer
+received — under a slow consumer, under shutdown races, and across a
+checkpoint/restore cycle.
+"""
+
+import time
+
+import numpy as np
+
+from repro.data.pipeline import DataPipeline, ShardedBatchIterator
+from repro.data.synthetic import SyntheticLM
+
+
+def _pipeline(**kw):
+    src = SyntheticLM(vocab_size=37, seq_len=8, seed=5)
+    return DataPipeline(src, global_batch=4, **kw)
+
+
+def _batch_ids(batches):
+    """Recover each batch's cursor id by regenerating from the source."""
+    src = SyntheticLM(vocab_size=37, seq_len=8, seed=5)
+    ids = []
+    for b in batches:
+        for cur in range(200):
+            ref = src.batch(cur, 4)
+            if all(np.array_equal(ref[k], b[k]) for k in b):
+                ids.append(cur)
+                break
+        else:
+            raise AssertionError("batch not produced by any cursor")
+    return ids
+
+
+def test_no_batch_dropped_under_slow_consumer():
+    """A consumer slower than the producer (tiny queue, constant
+    backpressure) must still see every batch exactly once, in order."""
+    it = ShardedBatchIterator(_pipeline(), prefetch=1)
+    try:
+        got = []
+        for _ in range(12):
+            time.sleep(0.01)          # slower than generation: queue full
+            got.append(next(it))
+    finally:
+        it.close()
+    assert _batch_ids(got) == list(range(12)), (
+        "prefetch queue dropped or reordered a batch under backpressure")
+
+
+def test_close_reconciles_cursor_with_delivery():
+    """After close(), the cursor counts only delivered batches: prefetched
+    but unconsumed batches (queued or mid-handoff) are rewound, so a
+    checkpoint taken after shutdown resumes without skipping data."""
+    pipe = _pipeline()
+    it = ShardedBatchIterator(pipe, prefetch=3)
+    consumed = [next(it) for _ in range(2)]
+    time.sleep(0.2)                   # let the producer fill the queue
+    it.close()
+    assert pipe.cursor == len(consumed), (pipe.cursor, len(consumed))
+    assert _batch_ids(consumed) == [0, 1]
+
+
+def test_restart_from_checkpoint_replays_nothing_and_skips_nothing():
+    pipe = _pipeline()
+    it = ShardedBatchIterator(pipe, prefetch=2)
+    first = [next(it) for _ in range(3)]
+    it.close()
+    state = pipe.state_dict()
+
+    resumed = _pipeline()
+    resumed.load_state_dict(state)
+    it2 = ShardedBatchIterator(resumed, prefetch=2)
+    second = [next(it2) for _ in range(3)]
+    it2.close()
+    assert _batch_ids(first + second) == list(range(6))
+
+
+def test_iteration_stops_after_close():
+    it = ShardedBatchIterator(_pipeline(), prefetch=1)
+    next(it)
+    it.close()
+    # drain whatever close() could not rewind (nothing, since it joins
+    # first), then the iterator must terminate instead of blocking forever
+    try:
+        while True:
+            next(it)
+    except StopIteration:
+        pass

@@ -25,6 +25,7 @@ FAST_ARGS = {
     "failover.py": [],
     "async_vs_sync.py": ["--quick"],
     "lda_topic_model.py": ["--quick"],
+    "lossy_network.py": [],
     "serve_decode.py": ["--batch", "1", "--prompt-len", "8",
                         "--new-tokens", "4"],
 }

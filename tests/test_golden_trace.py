@@ -28,19 +28,23 @@ GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            "golden", "cluster_sim_trace.txt")
 
 
-def golden_run(hooks=None):
+def golden_run(hooks=None, transport=None, extra_events=()):
     """The pinned configuration: every simulator feature on one run.
 
     ``hooks`` (a ``repro.core.harness.HookBus``) attaches telemetry to the
     same pinned run — tests/test_chrome_trace_golden.py pins the Chrome
     trace export of this exact configuration, and the test below doubles
-    as proof that an attached tracer cannot perturb the simulation."""
+    as proof that an attached tracer cannot perturb the simulation.
+    ``transport`` / ``extra_events`` let tests/test_transport.py prove the
+    complementary invariant: a configured transport tier (and zero-rate
+    loss events) cannot perturb it either."""
     scenario = Scenario(
         [WorkerLeave(time=2.0, worker="worker5"),
          AggregatorFail(time=2.5, host="worker0"),
          WorkerJoin(time=4.0)]
         + bandwidth_trace("worker2", [(1.0, gbps(1), gbps(1)),
-                                      (3.0, gbps(10), gbps(10))]))
+                                      (3.0, gbps(10), gbps(10))])
+        + list(extra_events))
     cfg = SchedulerConfig(server="server",
                           aggregators=["worker0", "worker1"],
                           tau_max=12, mode="async", batch_interval=0.1)
@@ -49,7 +53,8 @@ def golden_run(hooks=None):
     # drops, joins and leaves are all pinned non-trivially below)
     sim = ClusterSim(6, cfg, update_size=mb(100), compute_time=0.05,
                      straggler=C2, bandwidth=N2, monitor_lag=0.2, seed=42,
-                     default_bw=gbps(1.5), scenario=scenario, hooks=hooks)
+                     default_bw=gbps(1.5), scenario=scenario, hooks=hooks,
+                     transport=transport)
     return sim.run(until_time=8.0)
 
 

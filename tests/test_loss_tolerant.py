@@ -1,0 +1,188 @@
+"""Hypothesis property suite for graceful degradation (DESIGN.md §12):
+the ``ErrorFeedback`` compressor's accumulated residual norm stays within
+the configured phase-aware bound across random drop patterns, drop rates
+and top-k fractions — the twin of ``test_replica_property.py``, applied to
+the data plane instead of replica divergence.
+
+The bound is *enforced*, not assumed (an adversarial drop of the largest
+top-k coordinate defeats any open-loop guarantee), so the invariant under
+test is exactly the one the sender implements: after every ``compress``
+call, ``||residual|| <= bound`` — and conservation: residual + everything
+delivered reconstructs the quantize-rounded input stream.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAS_HYPOTHESIS = True
+except ImportError:          # units below still run; properties skip
+    HAS_HYPOTHESIS = False
+
+    def given(*a, **k):
+        return pytest.mark.skip(reason="property tests need hypothesis")
+
+    def settings(*a, **k):
+        return lambda f: f
+
+from repro.dist.flatbuf import ErrorFeedback
+from repro.dist.policy import PhaseLossCallback, PhaseLossPolicy
+
+pytestmark = pytest.mark.lossy
+
+DIM = 64
+
+if HAS_HYPOTHESIS:
+    _PROPERTY_ARGS = dict(
+        seed=st.integers(0, 2 ** 31 - 1),
+        keep=st.floats(0.05, 1.0),
+        drop_rate=st.floats(0.0, 0.9),
+        bound_frac=st.floats(0.05, 2.0),
+        n_steps=st.integers(1, 10),
+        data=st.data())
+    _CONSERVATION_ARGS = dict(
+        seed=st.integers(0, 2 ** 31 - 1),
+        keep=st.floats(0.1, 1.0),
+        drop_rate=st.floats(0.0, 0.8),
+        n_steps=st.integers(1, 8))
+else:
+    _PROPERTY_ARGS = _CONSERVATION_ARGS = {}
+
+
+@settings(max_examples=40, deadline=None)
+@given(**_PROPERTY_ARGS)
+def test_residual_never_exceeds_phase_bound(seed, keep, drop_rate,
+                                            bound_frac, n_steps, data):
+    """Across random drop patterns/rates/top-k fractions, the residual the
+    sender carries into the next step never exceeds the bound the phase
+    policy set for this step — including heavy-tailed gradients whose
+    top-1 coordinate holds most of the mass."""
+    rng = np.random.default_rng(seed)
+    ef = ErrorFeedback(DIM)
+    for step in range(n_steps):
+        g = (rng.standard_normal(DIM)
+             * rng.exponential(scale=2.0)).astype(np.float32)
+        # occasionally spike one coordinate: the adversarial case where
+        # dropping a single slot would defeat any open-loop bound
+        if data.draw(st.booleans(), label=f"spike@{step}"):
+            g[rng.integers(DIM)] *= 50.0
+        bound = bound_frac * float(np.linalg.norm(g)) + 1e-6
+        k = max(1, min(DIM, int(round(keep * DIM))))
+        drop = data.draw(
+            st.lists(st.booleans(), min_size=k, max_size=k),
+            label=f"drops@{step}")
+        drop = np.asarray(drop) | (rng.random(k) < drop_rate)
+        chunk, delivered = ef.compress(g, keep=keep, bound=bound,
+                                       drop_mask=drop)
+        resid = float(np.linalg.norm(np.asarray(ef.residual)))
+        assert resid <= bound * (1 + 1e-4), (
+            resid, bound, keep, drop_rate, step, chunk.flushed)
+
+
+@settings(max_examples=30, deadline=None)
+@given(**_CONSERVATION_ARGS)
+def test_delivered_plus_residual_conserves_mass(seed, keep, drop_rate,
+                                                n_steps):
+    """Nothing is silently lost: at any point, sum(delivered) + residual
+    equals the sum of all inputs exactly (error feedback's defining
+    telescoping identity; quantization error lives in the residual)."""
+    rng = np.random.default_rng(seed)
+    ef = ErrorFeedback(DIM)
+    total_in = np.zeros(DIM, np.float64)
+    total_out = np.zeros(DIM, np.float64)
+    for _ in range(n_steps):
+        g = rng.standard_normal(DIM).astype(np.float32)
+        k = max(1, min(DIM, int(round(keep * DIM))))
+        _, delivered = ef.compress(
+            g, keep=keep, bound=float(np.linalg.norm(g)),
+            drop_mask=rng.random(k) < drop_rate)
+        total_in += g.astype(np.float64)
+        total_out += np.asarray(delivered, np.float64)
+    gap = total_in - (total_out + np.asarray(ef.residual, np.float64))
+    assert np.abs(gap).max() <= 1e-3 * max(1.0, np.abs(total_in).max()), (
+        np.abs(gap).max())
+
+
+def test_no_bound_accepts_any_residual():
+    ef = ErrorFeedback(DIM)
+    g = np.zeros(DIM, np.float32)
+    g[0] = 100.0
+    chunk, _ = ef.compress(g, keep=1.0 / DIM,
+                           drop_mask=np.asarray([True]))   # drop the top-1
+    assert chunk.flushed == 0
+    assert float(np.linalg.norm(np.asarray(ef.residual))) \
+        == pytest.approx(100.0)
+
+
+def test_bad_keep_rejected():
+    ef = ErrorFeedback(DIM)
+    with pytest.raises(ValueError):
+        ef.compress(np.zeros(DIM, np.float32), keep=0.0)
+
+
+# --------------------------------------------------------------------------- #
+# the phase-aware policy driving the bounds
+# --------------------------------------------------------------------------- #
+class TestPhaseLossPolicy:
+    def test_starts_permissive_and_tightens_when_flat(self):
+        pol = PhaseLossPolicy(max_loss=0.3, min_loss=0.0, max_keep=1.0,
+                              min_keep=0.1, ref_improvement=0.05)
+        assert pol.phase() == 1.0                 # no data yet: early
+        assert pol.allowed_loss() == pytest.approx(0.3)
+        assert pol.topk_keep() == pytest.approx(0.1)
+        for v in [10.0, 10.0, 10.0, 10.0]:        # flat loss curve
+            pol.observe(v)
+        assert pol.phase() == 0.0
+        assert pol.allowed_loss() == pytest.approx(0.0)
+        assert pol.topk_keep() == pytest.approx(1.0)
+
+    def test_steep_descent_stays_permissive(self):
+        pol = PhaseLossPolicy(ref_improvement=0.05)
+        for v in [10.0, 8.0, 6.0, 4.0]:           # 20%/step improvement
+            pol.observe(v)
+        assert pol.phase() == 1.0
+
+    def test_monotone_interpolation(self):
+        pol = PhaseLossPolicy(max_loss=0.4, min_loss=0.1,
+                              ref_improvement=0.1)
+        losses, bounds = [], []
+        curve = [10.0 * (0.9 ** i) for i in range(6)]       # decaying
+        curve += [curve[-1]] * 10       # flat long enough to fill the window
+        for v in curve:
+            pol.observe(v)
+            losses.append(pol.allowed_loss())
+            bounds.append(pol.residual_bound(1.0))
+        assert losses[-1] == pytest.approx(0.1)             # tightened
+        assert min(losses) >= 0.1 and max(losses) <= 0.4
+        assert bounds[-1] <= bounds[0]
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            PhaseLossPolicy(max_loss=1.0)
+        with pytest.raises(ValueError):
+            PhaseLossPolicy(min_keep=0.0)
+        with pytest.raises(ValueError):
+            PhaseLossPolicy(window=1)
+
+    def test_callback_feeds_policy_from_batch_metrics(self):
+        pol = PhaseLossPolicy()
+        cb = PhaseLossCallback(pol, metric="loss")
+        for step, v in enumerate([5.0, 5.0, 5.0]):
+            cb.on_batch_end(None, step, {"loss": v, "other": 1.0})
+        cb.on_batch_end(None, 99, None)           # metric-less: ignored
+        cb.on_batch_end(None, 99, {"other": 2.0})
+        assert pol.phase() == 0.0                 # saw the flat curve
+
+    def test_transport_config_integration(self):
+        """The simulator's bounded policy reads allowed_loss() live."""
+        from repro.core.simulator import TransportConfig
+
+        pol = PhaseLossPolicy(max_loss=0.3, min_loss=0.0)
+        tc = TransportConfig(policy="bounded", phase_policy=pol)
+        assert tc.allowed_loss() == pytest.approx(0.3)      # early
+        for v in [1.0] * 5:
+            pol.observe(v)                                  # flat
+        assert tc.allowed_loss() == pytest.approx(0.0)
+        assert tc.repair_fraction(0.2, 0.0) == pytest.approx(0.2)

@@ -1,0 +1,225 @@
+"""Bounded-loss transport tier (DESIGN.md §12).
+
+Four layers of coverage:
+
+* ``LossSchedule`` arithmetic — path composition, windowed events,
+  byte-weighted ``transfer_loss`` over a real reservation profile;
+* ``TransportConfig`` policy math — repair fractions per policy,
+  phase-policy override;
+* end-to-end ``ClusterSim`` behavior — reliable retransmission inflates
+  commit time and counts retransmits, bounded mode accepts drops inside
+  its allowance, deadlines/retry budgets give up and record drops;
+* the zero-loss identity — with a transport tier *configured* but no
+  loss (and separately with explicit zero-rate events), the pinned golden
+  commit trace and the Chrome trace export are byte-identical to the
+  transport-less goldens.
+"""
+
+import math
+
+import pytest
+
+from repro.core.network import LossSchedule, NetworkState, gbps, mb
+from repro.core.scenario import LinkDegrade, PacketLoss, Scenario
+from repro.core.scheduler import SchedulerConfig
+from repro.core.simulator import ClusterSim, TransportConfig
+
+from test_golden_trace import GOLDEN_PATH, golden_run, render_trace
+
+pytestmark = pytest.mark.lossy
+
+
+# --------------------------------------------------------------------------- #
+# LossSchedule arithmetic
+# --------------------------------------------------------------------------- #
+class TestLossSchedule:
+    def test_inactive_by_default_and_zero_rate_is_inert(self):
+        ls = LossSchedule()
+        assert not ls.active
+        ls.set_drop("w1", 0.0, 0.0)            # zero rate, no window
+        ls.set_corrupt("w1", 0.0, 0.0)
+        assert not ls.active                   # golden safety: no state
+
+    def test_path_composition(self):
+        """src-up and dst-down losses compose as independent stages."""
+        ls = LossSchedule()
+        ls.set_drop("w1", 0.0, 0.2, direction="up")
+        ls.set_drop("s", 0.0, 0.1, direction="down")
+        drop, corrupt = ls.instant_loss("w1", "s", 1.0)
+        assert drop == pytest.approx(1.0 - 0.8 * 0.9)
+        assert corrupt == 0.0
+        # reverse direction uses w1-down / s-up: neither is lossy
+        assert ls.instant_loss("s", "w1", 1.0) == (0.0, 0.0)
+
+    def test_until_window_expires(self):
+        ls = LossSchedule()
+        ls.set_drop("w1", 1.0, 0.5, until=2.0)
+        assert ls.instant_loss("w1", "s", 1.5)[0] == pytest.approx(0.5)
+        assert ls.instant_loss("w1", "s", 2.5)[0] == 0.0
+
+    def test_transfer_loss_weights_by_bytes(self):
+        """A loss window covering only part of a transfer charges only the
+        bytes that moved inside the window."""
+        net = NetworkState(["w1", "s"], default_bw=10.0)
+        tr = net.reserve("w1", "s", 100.0, 0.0)     # 10 B/s -> [0, 10]
+        ls = LossSchedule()
+        ls.set_drop("w1", 0.0, 0.4, until=5.0)      # first half only
+        dropped, corrupted = ls.transfer_loss("w1", "s", tr.profile)
+        assert dropped == pytest.approx(0.2)        # 50 of 100 B at 40%
+        assert corrupted == 0.0
+
+    def test_corruption_charged_to_survivors(self):
+        net = NetworkState(["w1", "s"], default_bw=10.0)
+        tr = net.reserve("w1", "s", 100.0, 0.0)
+        ls = LossSchedule()
+        ls.set_drop("w1", 0.0, 0.5)
+        ls.set_corrupt("w1", 0.0, 0.2)
+        dropped, corrupted = ls.transfer_loss("w1", "s", tr.profile)
+        assert dropped == pytest.approx(0.5)
+        assert corrupted == pytest.approx(0.5 * 0.2)   # only non-dropped
+
+    def test_remove_host_clears_links(self):
+        ls = LossSchedule()
+        ls.set_drop("w1", 0.0, 0.3)
+        assert ls.active
+        ls.remove_host("w1")
+        assert not ls.active
+
+
+# --------------------------------------------------------------------------- #
+# TransportConfig policy math
+# --------------------------------------------------------------------------- #
+class TestTransportConfig:
+    def test_policy_validated(self):
+        with pytest.raises(ValueError):
+            TransportConfig(policy="best-effort")
+
+    def test_repair_fractions(self):
+        assert TransportConfig(policy="lossless").repair_fraction(0.3, 0.1) \
+            == 0.0
+        assert TransportConfig(policy="reliable").repair_fraction(0.3, 0.1) \
+            == pytest.approx(0.4)
+        bounded = TransportConfig(policy="bounded", loss_tolerance=0.2)
+        # drops above the allowance plus ALL corruption get repaired
+        assert bounded.repair_fraction(0.3, 0.1) == pytest.approx(0.2)
+        assert bounded.repair_fraction(0.1, 0.0) == 0.0
+
+    def test_phase_policy_overrides_static_tolerance(self):
+        class Tight:
+            def allowed_loss(self):
+                return 0.01
+
+        tc = TransportConfig(policy="bounded", loss_tolerance=0.5,
+                             phase_policy=Tight())
+        assert tc.allowed_loss() == 0.01
+        assert tc.repair_fraction(0.3, 0.0) == pytest.approx(0.29)
+
+
+# --------------------------------------------------------------------------- #
+# end-to-end simulator behavior
+# --------------------------------------------------------------------------- #
+def _run(transport, events, *, n=3, until=6.0, seed=11):
+    cfg = SchedulerConfig(server="server", aggregators=[], tau_max=100,
+                          mode="async", batch_interval=0.2)
+    sim = ClusterSim(n, cfg, update_size=mb(50), compute_time=0.05,
+                     seed=seed, default_bw=gbps(1.0),
+                     scenario=Scenario(list(events)), transport=transport)
+    return sim.run(until_time=until)
+
+
+class TestSimulatorTransport:
+    EVENTS = [PacketLoss(time=0.0, host="worker0", rate=0.4)]
+
+    def test_reliable_retransmits_and_slows_commits(self):
+        clean = _run(TransportConfig(policy="reliable"), [])
+        lossy = _run(TransportConfig(policy="reliable"), self.EVENTS)
+        assert lossy.retransmits > 0
+        assert lossy.metrics.counter("transport/bytes_retransmitted").value > 0
+        assert lossy.metrics.counter("transport/bytes_lost").value > 0
+        # repairs consume uplink capacity -> strictly fewer commits
+        assert lossy.n_commits < clean.n_commits
+        assert lossy.drops == 0                     # nothing given up
+
+    def test_lossless_policy_measures_but_never_repairs(self):
+        res = _run(TransportConfig(policy="lossless"), self.EVENTS)
+        assert res.retransmits == 0
+        assert res.transport_loss_events > 0
+        assert res.metrics.counter("transport/bytes_lost").value > 0
+
+    def test_bounded_accepts_drops_inside_allowance(self):
+        tc = TransportConfig(policy="bounded", loss_tolerance=0.5)
+        res = _run(tc, self.EVENTS)
+        assert res.retransmits == 0                 # 0.4 < 0.5: all accepted
+        assert res.metrics.counter("transport/bytes_accepted").value > 0
+        clean = _run(TransportConfig(policy="bounded", loss_tolerance=0.5), [])
+        assert res.n_commits == clean.n_commits     # acceptance is free
+
+    def test_bounded_repairs_corruption_even_inside_allowance(self):
+        tc = TransportConfig(policy="bounded", loss_tolerance=0.9)
+        res = _run(tc, [LinkDegrade(time=0.0, host="worker0",
+                                    corrupt_rate=0.3)])
+        assert res.retransmits > 0                  # corruption never accepted
+        assert res.metrics.counter("transport/bytes_corrupted").value > 0
+
+    def test_retry_budget_expiry_drops_update(self):
+        tc = TransportConfig(policy="reliable", max_retries=1)
+        res = _run(tc, [PacketLoss(time=0.0, host="worker0", rate=0.9)])
+        assert res.transport_expired > 0
+        # each drop stems from an expiry; an expiry whose give-up time
+        # lands past the horizon never gets its drop event processed
+        assert 0 < res.drops <= res.transport_expired
+        # workers resume computing after a transport drop
+        assert res.n_commits > 0
+
+    def test_deadline_timeout_drops_update(self):
+        tc = TransportConfig(policy="reliable", deadline=0.5,
+                             backoff_base=1.0)
+        res = _run(tc, [PacketLoss(time=0.0, host="worker0", rate=0.9)])
+        assert res.transport_timeouts > 0
+        assert 0 < res.drops <= res.transport_timeouts
+
+    def test_loss_window_recovers(self):
+        """After the ``until`` bound, transfers are clean again."""
+        tc = TransportConfig(policy="reliable")
+        res = _run(tc, [PacketLoss(time=0.0, host="worker0", rate=0.4,
+                                   until=1.0)], until=8.0)
+        clean = _run(tc, [], until=8.0)
+        assert 0 < res.retransmits
+        # losing the first second costs a bounded number of commits
+        assert res.n_commits > clean.n_commits * 0.6
+
+
+# --------------------------------------------------------------------------- #
+# the zero-loss identity (the PR's non-perturbation guarantee)
+# --------------------------------------------------------------------------- #
+class TestZeroLossGoldenIdentity:
+    def test_configured_transport_reproduces_text_golden(self):
+        res = golden_run(transport=TransportConfig(policy="reliable"))
+        with open(GOLDEN_PATH) as f:
+            assert render_trace(res) == f.read(), (
+                "a configured (but loss-free) transport tier must not "
+                "perturb the pinned simulation")
+
+    def test_zero_rate_events_reproduce_text_golden(self):
+        events = [PacketLoss(time=1.0, host="worker1", rate=0.0),
+                  LinkDegrade(time=1.5, host="worker3", corrupt_rate=0.0)]
+        res = golden_run(transport=TransportConfig(policy="reliable"),
+                         extra_events=events)
+        with open(GOLDEN_PATH) as f:
+            assert render_trace(res) == f.read(), (
+                "zero-rate loss events must be completely inert")
+
+    def test_configured_transport_reproduces_chrome_golden(self):
+        from repro.core.harness import HookBus
+        from repro.obs import MetricsRegistry, Tracer
+
+        from test_chrome_trace_golden import GOLDEN_PATH as CHROME_GOLDEN
+        from test_chrome_trace_golden import render_chrome
+
+        tracer = Tracer(process_name="mlfabric-sim")
+        golden_run(HookBus(metrics=MetricsRegistry(), tracer=tracer),
+                   transport=TransportConfig(policy="reliable"))
+        with open(CHROME_GOLDEN) as f:
+            assert render_chrome(tracer) == f.read(), (
+                "a loss-free transport tier must not add or move any "
+                "trace span")
