@@ -750,6 +750,76 @@ def bench_lossy_transport(out: dict, *, fast: bool = False):
     record("lossy_transport_time_to_target", dt, cells)
 
 
+def bench_switch_aggregation(out: dict, *, fast: bool = False):
+    """PR9 tentpole: the three aggregation backends — host (f32 to host
+    aggregators), switch (SwitchML-style in-network int8 pod sums drained
+    straight to the server), hierarchical (pod switch sums fed as
+    pseudo-updates to the host aggregator tier) — run the identical
+    seeded cluster to the same commit target across three scenario
+    presets.  ``time_to_target_s`` is the makespan axis; the switch
+    counters (groups/drains/spills, occupancy peak) explain *why* the
+    in-network rows win: members ship the 0.254x int8 wire and the server
+    ingests one drain per pod.  ``pod_stress`` chokes the server downlink
+    — the regime where hierarchical must beat pure host (asserted by
+    tests/test_backends.py on the emitted rows)."""
+    from repro.core import SwitchConfig
+    from repro.scenarios import churn, congestion_wave, pod_stress
+
+    n = 12 if fast else 16
+    pod = 4
+    target = 60 if fast else 200
+    horizon = 60.0
+    presets = {
+        "pod_stress": lambda: pod_stress(n, server_down=gbps(2.5)),
+        "churn": lambda: churn(n, leave_at=3.0, rejoin_at=8.0),
+        "congestion_wave": lambda: congestion_wave(
+            [f"worker{i}" for i in range(0, n, 4)], start=2.0),
+    }
+    t0 = time.perf_counter()
+    rows = []
+    for pname, make_scen in presets.items():
+        for backend in ("host", "switch", "hierarchical"):
+            cfg = SchedulerConfig(server="server",
+                                  aggregators=["worker0", "worker1"],
+                                  tau_max=100, mode="async",
+                                  batch_interval=0.5, backend=backend,
+                                  switch=SwitchConfig(pod_size=pod))
+            res = ClusterSim(n, cfg, update_size=mb(100), compute_time=0.05,
+                             straggler=C2, bandwidth=N2, seed=7,
+                             scenario=make_scen(),
+                             ).run(until_time=horizon, until_commits=target)
+            m = res.metrics
+            rows.append({
+                "scenario": pname, "backend": backend,
+                "commit_target": target, "commits": res.n_commits,
+                "time_to_target_s": res.sim_time,
+                "commit_rate": res.commit_rate,
+                "bytes_to_server_gb": res.bytes_to_server / 1e9,
+                "bytes_in_network_gb": res.bytes_in_network / 1e9,
+                "switch_groups": res.switch_groups,
+                "switch_drains": res.switch_drains,
+                "switch_spills": res.switch_spills,
+                "occupancy_peak":
+                    m.gauge("switch/occupancy_peak").value
+                    if backend != "host" else 0,
+            })
+    makespan = {(r["scenario"], r["backend"]): r["time_to_target_s"]
+                for r in rows}
+    hier_wins = (makespan[("pod_stress", "hierarchical")]
+                 < makespan[("pod_stress", "host")])
+    dt = time.perf_counter() - t0
+    out["switch_aggregation"] = {
+        "n_workers": n, "pod_size": pod, "commit_target": target,
+        "horizon_s": horizon, "hierarchical_beats_host_on_pod_stress":
+        hier_wins, "rows": rows}
+    cells = ";".join(
+        f"{r['scenario']}/{r['backend']}={r['time_to_target_s']:.1f}s"
+        f"(drains={r['switch_drains']},spills={r['switch_spills']})"
+        for r in rows)
+    record("switch_aggregation_time_to_target", dt,
+           f"hier_beats_host={hier_wins};" + cells)
+
+
 def bench_trace_artifact(out: dict, path: str = "runs/trace_dynamic_failover.json"):
     """DESIGN.md §10 trace artifact: the paper's dynamic-cluster scenario
     and the §3.3 server-failover scenario, run with a real ``Tracer`` on
@@ -827,8 +897,8 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="data-plane + failover benches only (CI smoke); "
-                         "writes BENCH_PR3.json and BENCH_PR4.json and "
-                         "skips the slow simulator grid")
+                         "writes the BENCH_*.json records and skips the "
+                         "slow simulator grid")
     ap.add_argument("--scale", action="store_true",
                     help="also run the U=4096 dynamic ClusterSim headline "
                          "(~1 min; always part of the full suite)")
@@ -839,6 +909,7 @@ def main(argv=None) -> None:
     pr4: dict = {}
     obs: dict = {}
     pr8: dict = {}
+    pr9: dict = {}
     if args.fast:
         bench_fig2_aggregation()
         bench_fused_dequant_aggregate(pr3)
@@ -847,6 +918,7 @@ def main(argv=None) -> None:
         bench_failover_recovery(pr4)
         bench_divergence_vs_divmax(pr4)
         bench_lossy_transport(pr8, fast=True)
+        bench_switch_aggregation(pr9, fast=True)
         bench_planner_latency_vs_u(obs)
         bench_repair_latency(obs)
         if args.scale:
@@ -855,6 +927,7 @@ def main(argv=None) -> None:
         write_bench_json(pr3, "BENCH_PR3.json")
         write_bench_json(pr4, "BENCH_PR4.json")
         write_bench_json(pr8, "BENCH_PR8.json", config={"fast": True})
+        write_bench_json(pr9, "BENCH_PR9.json", config={"fast": True})
         write_bench_json(obs, "BENCH_OBS.json", config={"fast": True})
         return
     bench_fig2_aggregation()
@@ -866,6 +939,7 @@ def main(argv=None) -> None:
     bench_failover_recovery(pr4)
     bench_divergence_vs_divmax(pr4)
     bench_lossy_transport(pr8)
+    bench_switch_aggregation(pr9)
     bench_incremental_planner()
     bench_sec74_scheduler_scaling()
     bench_roofline_summary()
@@ -879,6 +953,7 @@ def main(argv=None) -> None:
     write_bench_json(pr3, "BENCH_PR3.json")
     write_bench_json(pr4, "BENCH_PR4.json")
     write_bench_json(pr8, "BENCH_PR8.json", config={"fast": False})
+    write_bench_json(pr9, "BENCH_PR9.json", config={"fast": False})
     write_bench_json(obs, "BENCH_OBS.json", config={"fast": False})
 
 

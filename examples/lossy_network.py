@@ -65,20 +65,31 @@ def policy_table(n=16, horizon=12.0):
 
 
 def error_feedback_demo(d=4096, steps=30, seed=0):
-    """The sender half of bounded mode: even with 25% of the top-k slots
-    dropped every step, the enforced error-feedback residual never exceeds
-    its bound and the aggregate tracks the true gradient sum."""
-    from repro.dist import ErrorFeedback
+    """The sender half of bounded mode: the per-slot drops come from the
+    same ``burst_loss`` schedule the simulator replays — during the burst
+    windows 25% of the top-k slots vanish, outside them none do — and the
+    enforced error-feedback residual never exceeds its bound while the
+    aggregate tracks the true gradient sum."""
+    from repro.core import LossSchedule
+    from repro.dist import ErrorFeedback, loss_drop_mask
+
+    # the sender's view of the burst_loss preset: 1.5s-long 25%-drop
+    # bursts every 4s on worker0's uplink (one step per 0.5s below)
+    loss = LossSchedule()
+    for b in range(2):
+        loss.set_drop("worker0", 2.0 + b * 4.0, 0.25, until=3.5 + b * 4.0,
+                      direction="up")
 
     rng = np.random.default_rng(seed)
     ef = ErrorFeedback(d)
     true_sum = np.zeros(d, np.float32)
     delivered_sum = np.zeros(d, np.float32)
     worst = 0.0
-    for _ in range(steps):
+    for step in range(steps):
         g = rng.standard_normal(d).astype(np.float32)
         bound = 0.5 * float(np.linalg.norm(g))
-        drop = rng.random(d // 10) < 0.25          # keep=0.1 -> k = d/10
+        drop = loss_drop_mask(loss, "worker0", "server", 0.5 * step,
+                              d // 10)               # keep=0.1 -> k = d/10
         _, delivered = ef.compress(g, keep=0.1, bound=bound, drop_mask=drop)
         true_sum += g
         delivered_sum += np.asarray(delivered)
@@ -86,7 +97,7 @@ def error_feedback_demo(d=4096, steps=30, seed=0):
         worst = max(worst, resid / bound)
     err = (np.linalg.norm(delivered_sum - true_sum)
            / np.linalg.norm(true_sum))
-    print(f"=== error feedback, d={d}, keep=10%, 25% slot drops, "
+    print(f"=== error feedback, d={d}, keep=10%, burst_loss-driven drops, "
           f"{steps} steps ===")
     print(f"worst residual/bound: {worst:.3f} (enforced <= 1)")
     print(f"relative error of delivered sum vs true sum: {err:.3f}")

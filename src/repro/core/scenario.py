@@ -86,6 +86,18 @@ class AggregatorFail(ScenarioEvent):
 
 
 @dataclass(frozen=True)
+class SwitchFail(ScenarioEvent):
+    """An in-network aggregation switch (``switch{pod}``) fails at ``time``.
+
+    Only meaningful under the switch/hierarchical backends (DESIGN.md
+    §13): in-flight pod groups through the switch are released and their
+    members rescheduled; later plans spill that pod to the host path.
+    """
+
+    switch: str = ""
+
+
+@dataclass(frozen=True)
 class BandwidthTrace(ScenarioEvent):
     """Set ``host``'s NIC rates from ``time`` on (``None`` leaves a
     direction unchanged)."""
@@ -223,6 +235,7 @@ class Scenario:
 
 __all__ = [
     "Scenario", "ScenarioEvent", "WorkerJoin", "WorkerLeave",
-    "AggregatorFail", "BandwidthTrace", "MonitorLagChange", "ServerFail",
-    "ReplicaPromote", "PacketLoss", "LinkDegrade", "bandwidth_trace",
+    "AggregatorFail", "SwitchFail", "BandwidthTrace", "MonitorLagChange",
+    "ServerFail", "ReplicaPromote", "PacketLoss", "LinkDegrade",
+    "bandwidth_trace",
 ]

@@ -4,7 +4,8 @@ Per batch of ready updates the scheduler runs, in sequence,
 
   1. ``order_updates``     (Alg. 2)  — transfer/apply order, delay bounds,
                                         look-ahead drops;
-  2. ``aggregate_updates`` (Alg. 3)  — partition into direct + aggregator
+  2. the aggregation backend (Alg. 3 for ``backend="host"``; see
+     ``core/backends.py``)          — partition into direct + aggregator
                                         groups, concrete transfer schedules;
   3. ``plan_replication``  (§5.3)    — opportunistic replica copies under a
                                         divergence bound.
@@ -19,7 +20,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
-from .aggregation import AggregationResult, aggregate_updates
+from .aggregation import AggregationResult
+from .backends import make_backend
 from .network import NetworkState
 from .ordering import Update, OrderingResult, order_updates
 from .replication import ReplicationResult, ReplicationState, plan_replication
@@ -37,6 +39,8 @@ class SchedulerConfig:
     batch_interval: float = 0.1            # 100 ms batching (paper §7)
     mode: str = "async"                    # "async" | "sync" (§6)
     planner: str = "incremental"           # Alg. 3 planner ("exhaustive" ref)
+    backend: str = "host"                  # "host" | "switch" | "hierarchical"
+    switch: Optional[object] = None        # SwitchConfig (switch backends)
 
 
 @dataclass
@@ -67,6 +71,7 @@ class MLfabricScheduler:
 
     def __init__(self, config: SchedulerConfig):
         self.config = config
+        self.backend = make_backend(config)
         self.replication_state = ReplicationState(
             gamma=config.gamma, div_max=config.div_max)
         self.v_server = 0          # model version at the server
@@ -91,7 +96,7 @@ class MLfabricScheduler:
             # switches to makespan, eq. 16).
             ordering = OrderingResult(order=list(updates), dropped=[],
                                       transfers={}, network=network)
-            agg = aggregate_updates(ordering.order, network, cfg.server,
+            agg = self.backend.plan(ordering.order, network, cfg.server,
                                     cfg.aggregators, t_now=t_now,
                                     objective="makespan", planner=cfg.planner)
         else:
@@ -100,7 +105,7 @@ class MLfabricScheduler:
             ordering = order_updates(list(updates), network.overlay(), cfg.server,
                                      tau_max=cfg.tau_max, v_init=self.v_server,
                                      t_now=t_now)
-            agg = aggregate_updates(ordering.order, network, cfg.server,
+            agg = self.backend.plan(ordering.order, network, cfg.server,
                                     cfg.aggregators, t_now=t_now,
                                     objective="avg_commit",
                                     planner=cfg.planner)

@@ -46,14 +46,16 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..obs.metrics import MetricsRegistry
-from .aggregation import AggregationResult, aggregate_updates
+from .aggregation import AggregationResult
+from .backends import SwitchPlanResult, profile_time_to
 from .delay import DelayTracker
 from .harness import HookBus, NULL_BUS
 from .network import LossSchedule, NetworkState, Transfer, gbps, mb
 from .ordering import Update
 from .scenario import (AggregatorFail, BandwidthTrace, LinkDegrade,
                        MonitorLagChange, PacketLoss, ReplicaPromote, Scenario,
-                       ScenarioEvent, ServerFail, WorkerJoin, WorkerLeave)
+                       ScenarioEvent, ServerFail, SwitchFail, WorkerJoin,
+                       WorkerLeave)
 from .scheduler import BatchPlan, MLfabricScheduler, SchedulerConfig
 
 
@@ -223,6 +225,12 @@ _COUNTER_METRICS: Dict[str, str] = {
     "retransmits": "transport/retransmits",    # repair rounds reserved
     "transport_timeouts": "transport/timeouts",  # gave up: deadline passed
     "transport_expired": "transport/expired",    # gave up: retries exhausted
+    "replica_resourced": "transport/replica_resourced",  # lossy copy fallback
+    # switch aggregation backend (DESIGN.md §13):
+    "switch_groups": "switch/groups",        # pod groups enacted
+    "switch_drains": "switch/drains",        # pod sums drained upstream
+    "switch_spills": "switch/spills",        # pool-exhausted -> host path
+    "switch_fails": "switch/fails",          # SwitchFail events applied
 }
 
 _RECOVERY_METRIC = "failover/recovery_time"
@@ -388,8 +396,22 @@ class ClusterSim:
         # joining workers, up to the initial roster size.
         self.aggregators: List[str] = self.cfg.aggregators
         self._initial_agg_count = len(self.aggregators)
+        # pods of vacated roster slots: joiners refill same-pod first
+        # (untagged ``None`` slots — no switch topology — match anyone,
+        # reproducing the pre-pod refill behavior exactly)
+        self._agg_vacancy_pods: List[Optional[int]] = []
 
         self.scheduler = MLfabricScheduler(self.cfg)
+        # aggregation backend (DESIGN.md §13): the scheduler owns it; the
+        # simulator shares its dead-switch set so SwitchFail events steer
+        # every subsequent plan/repair around the lost capacity
+        self.backend = self.scheduler.backend
+        self.switch_cfg = getattr(self.backend, "config", None)
+        for sw in self.backend.switch_hosts(self.workers):
+            bw = (self.switch_cfg.switch_bw
+                  if self.switch_cfg.switch_bw is not None else default_bw)
+            self.net_actual.add_host(sw, bw)
+            self.net_lagged.add_host(sw, bw)
         self.result = SimResult()
 
         self._uid = itertools.count()
@@ -478,6 +500,8 @@ class ClusterSim:
             self._apply_leave(t, ev.worker)
         elif isinstance(ev, AggregatorFail):
             self._apply_aggregator_fail(t, ev.host)
+        elif isinstance(ev, SwitchFail):
+            self._apply_switch_fail(t, ev.switch)
         elif isinstance(ev, BandwidthTrace):
             if ev.host in self.net_actual.up and ev.host not in self._dead:
                 self.net_actual.set_bandwidth(ev.host, t, up=ev.up, down=ev.down)
@@ -549,9 +573,25 @@ class ClusterSim:
         self._dead.discard(name)
         self.workers.append(name)
         self.n_workers = len(self.workers)
-        # aggregation duty: a joiner refills a failed slot in the roster
-        if len(self.aggregators) < self._initial_agg_count:
-            self.aggregators.append(name)
+        # aggregation duty: a joiner refills a failed slot in the roster.
+        # Vacancies remember the failed aggregator's pod; a same-pod joiner
+        # takes that slot first, and a cross-pod joiner only takes untagged
+        # slots — filling a pod-tagged slot from another pod would silently
+        # move aggregation traffic across the pod boundary and skew the
+        # switch-vs-host comparison.  Without a switch topology every
+        # vacancy is untagged, so this is exactly the old size-capped append.
+        if self._agg_vacancy_pods:
+            pod = self._pod_of(name)
+            slot: Optional[int] = None
+            if pod is not None and pod in self._agg_vacancy_pods:
+                slot = self._agg_vacancy_pods.index(pod)
+            elif None in self._agg_vacancy_pods:
+                slot = self._agg_vacancy_pods.index(None)
+            elif pod is None:
+                slot = 0    # podless joiner: any vacancy beats a short roster
+            if slot is not None:
+                del self._agg_vacancy_pods[slot]
+                self.aggregators.append(name)
         self.result.joins += 1
         if self.on_join:
             self.on_join(name, t)
@@ -591,7 +631,7 @@ class ClusterSim:
                 self._cancel_commit(uid)
                 del self._inflight[uid]
                 direct = info["aggregator"] is None
-                size = info["update"].size
+                size = info.get("wire_size", info["update"].size)
                 self._release_unfinished(
                     t, info["transfer"],
                     refund_server=size if direct else 0.0,
@@ -615,6 +655,11 @@ class ClusterSim:
                 continue
             if uid in self._replica_gap and not self._server_failed:
                 self.net_actual.release(tr)
+                for ctr in info.pop("xmit_chain", ()):
+                    if ctr.t_end > t:
+                        self.net_actual.release(ctr)
+                        self.result.bytes_to_replica -= ctr.size
+                        self.result.bytes_in_network -= ctr.size
                 self._replica_epoch[uid] = self._replica_epoch.get(uid, 0) + 1
                 new_tr = self.net_actual.reserve(self.cfg.server,
                                                  self.cfg.replica,
@@ -644,30 +689,28 @@ class ClusterSim:
     def _apply_aggregator_fail(self, t: float, host: str) -> None:
         if host in self.aggregators:
             self.aggregators.remove(host)
+            self._agg_vacancy_pods.append(self._pod_of(host))
         # Re-route in-flight groups through the dead aggregator: surviving
         # members return to the pending pool (their gradient is resent from
         # the worker) and the next batch re-plans them on the new topology.
         # The dead group's unfinished reservations are freed — otherwise
         # phantom flows would throttle the retransmissions — and the
-        # never-delivered aggregate's bytes are refunded.
+        # never-delivered aggregate's bytes are refunded.  Switch-backend
+        # groups route through here too (``aggregator`` is the switch host,
+        # member transfers carry ``wire_size`` int8 bytes, and hierarchical
+        # plans add a second ``agg2`` hop: host-tier aggregator -> server).
         released_aggregates: set = set()
         rerouted: List[Update] = []
         for uid, info in list(self._inflight.items()):
-            if info["aggregator"] == host:
+            if info["aggregator"] == host or host in info.get("agg_hosts", ()):
                 self._cancel_commit(uid)
                 del self._inflight[uid]
-                self._release_unfinished(t, info["transfer"],
-                                         refund_network=info["update"].size)
+                self._release_unfinished(
+                    t, info["transfer"],
+                    refund_network=info.get("wire_size", info["update"].size))
                 self._release_chain(t, info.get("xmit_chain", ()),
                                     to_server=False)
-                agg_tr = info.get("agg_transfer")
-                if agg_tr is not None and agg_tr.uid not in released_aggregates:
-                    released_aggregates.add(agg_tr.uid)
-                    self._release_unfinished(t, agg_tr,
-                                             refund_server=agg_tr.size,
-                                             refund_network=agg_tr.size)
-                    self._release_chain(t, info.get("agg_chain", ()),
-                                        to_server=True)
+                self._release_group_tail(t, info, released_aggregates)
                 u: Update = info["update"]
                 u.t_avail = t
                 rerouted.append(u)
@@ -679,6 +722,49 @@ class ClusterSim:
                 self._repair_replan(t, rerouted)
             else:
                 self._pending.extend(rerouted)
+
+    def _release_group_tail(self, t: float, info: dict,
+                            released: set) -> None:
+        """Free a cancelled group's downstream reservations exactly once:
+        the aggregate (or switch-drain) transfer, and — for hierarchical
+        switch plans — the host-tier second hop."""
+        agg_tr = info.get("agg_transfer")
+        if agg_tr is not None and agg_tr.uid not in released:
+            released.add(agg_tr.uid)
+            to_server = info.get("agg_to_server", True)
+            self._release_unfinished(
+                t, agg_tr,
+                refund_server=agg_tr.size if to_server else 0.0,
+                refund_network=agg_tr.size)
+            self._release_chain(t, info.get("agg_chain", ()),
+                                to_server=to_server)
+        agg2 = info.get("agg2_transfer")
+        if agg2 is not None and agg2.uid not in released:
+            released.add(agg2.uid)
+            self._release_unfinished(t, agg2, refund_server=agg2.size,
+                                     refund_network=agg2.size)
+            self._release_chain(t, info.get("agg2_chain", ()), to_server=True)
+
+    def _pod_of(self, host: str) -> Optional[int]:
+        return (self.switch_cfg.pod_of(host)
+                if self.switch_cfg is not None else None)
+
+    def _apply_switch_fail(self, t: float, switch: str) -> None:
+        """An aggregation switch dies: in-flight pod groups through it are
+        released and re-routed exactly like a host-aggregator failure, and
+        the backend's dead-switch set makes every later plan spill the pod
+        to the host path."""
+        if switch in self.backend.dead_switches \
+                or switch not in self.net_actual.up:
+            return
+        self.backend.dead_switches.add(switch)
+        self.result.switch_fails += 1
+        self.trace.instant("switch_fail", cat="switch", track=switch, ts=t)
+        self._apply_aggregator_fail(t, switch)
+        for net in (self.net_actual, self.net_lagged):
+            net.remove_host(switch)
+        self.loss_actual.remove_host(switch)
+        self.loss_lagged.remove_host(switch)
 
     def _repair_replan(self, t: float, updates: List[Update]) -> None:
         """Event-driven plan repair (ROADMAP item 2, ``plan_repair=True``).
@@ -701,7 +787,7 @@ class ClusterSim:
         # deterministic SJF order (Alg. 2's core rule) for the mini-batch;
         # no tau/drop pass — these updates were already admitted once
         order = sorted(alive, key=lambda u: (u.size, u.uid))
-        agg = aggregate_updates(order, self.net_actual, self.cfg.server,
+        agg = self.backend.plan(order, self.net_actual, self.cfg.server,
                                 list(self.aggregators), t_now=t,
                                 objective="avg_commit",
                                 planner=self.cfg.planner)
@@ -764,6 +850,11 @@ class ClusterSim:
             self.net_actual.release(info["transfer"])
             self.result.bytes_to_replica -= info["update"].size
             self.result.bytes_in_network -= info["update"].size
+        for ctr in info.get("xmit_chain", ()):
+            if ctr.t_end > t:
+                self.net_actual.release(ctr)
+                self.result.bytes_to_replica -= ctr.size
+                self.result.bytes_in_network -= ctr.size
 
     # ------------------------------------------------------------------ #
     # server failure and replica promotion (§3.3)
@@ -789,19 +880,13 @@ class ClusterSim:
         for uid, info in list(self._inflight.items()):
             self._cancel_commit(uid)
             direct = info["aggregator"] is None
-            size = info["update"].size
+            size = info.get("wire_size", info["update"].size)
             self._release_unfinished(t, info["transfer"],
                                      refund_server=size if direct else 0.0,
                                      refund_network=size)
             self._release_chain(t, info.get("xmit_chain", ()),
                                 to_server=direct)
-            agg_tr = info.get("agg_transfer")
-            if agg_tr is not None and agg_tr.uid not in released_aggregates:
-                released_aggregates.add(agg_tr.uid)
-                self._release_unfinished(t, agg_tr, refund_server=agg_tr.size,
-                                         refund_network=agg_tr.size)
-                self._release_chain(t, info.get("agg_chain", ()),
-                                    to_server=True)
+            self._release_group_tail(t, info, released_aggregates)
             self._confiscate(uid)
         self._inflight.clear()
         # pending updates targeted the dead server -> regenerate-list
@@ -1046,6 +1131,8 @@ class ClusterSim:
         Member->aggregator hops never land in ``bytes_to_server``; they are
         charged to ``bytes_in_network``, which counts every hop.
         """
+        if isinstance(agg, SwitchPlanResult):
+            return self._enact_switch(agg, t_now)
         commit: Dict[int, float] = {}
         server = self.cfg.server
         failed: List[Tuple[int, float]] = []
@@ -1117,9 +1204,241 @@ class ClusterSim:
             self._push_event(t_fail, "transport_fail", uid=uid)
         return commit
 
+    def _enact_switch(self, agg: SwitchPlanResult,
+                      t_now: float) -> Dict[int, float]:
+        """Replay a switch/hierarchical backend plan on the actual network.
+
+        Pod members stream ``wire_size`` int8 bytes to their switch; the
+        pod sum drains upstream from the first-complete-window time
+        (recomputed on the *actual* member profiles) and a uid's commit is
+        clamped to its pod's last member stream — the final window cannot
+        drain before every member delivered it.  Hierarchical plans route
+        the drain through the host tier (``host_plan``'s pseudo-updates);
+        spilled updates take the verbatim host path inside that same plan.
+        """
+        commit: Dict[int, float] = {}
+        server = self.cfg.server
+        failed: List[Tuple[int, float]] = []
+        slot_bytes = self.switch_cfg.slot_bytes
+        self.result.switch_spills += agg.spill_count
+        peak = self.result.metrics.gauge("switch/occupancy_peak")
+        if agg.occupancy_peak > peak.value:
+            peak.set(agg.occupancy_peak)
+
+        # -- intra-pod stage: member streams into each switch ------------- #
+        pod_state: Dict[int, dict] = {}     # pseudo uid -> enacted pod state
+        for sg in agg.switch_groups:
+            ok_members: List[Update] = []
+            t_ready = t_now
+            t_first = t_now
+            for g in sg.members:
+                wsize = sg.wire_sizes[g.uid]
+                tr, t_done, chain, ok = self._deliver(
+                    g.worker, sg.switch, wsize, max(g.t_avail, t_now),
+                    uid=g.uid, kind="member", to_server=False)
+                self.result.bytes_in_network += wsize
+                self._inflight[g.uid] = {"update": g, "aggregator": sg.switch,
+                                         "transfer": tr, "xmit_chain": chain,
+                                         "wire_size": wsize}
+                self.trace.span(f"{g.worker}->{sg.switch}", cat="transfer",
+                                track=g.worker, ts=tr.t_start,
+                                dur=tr.t_end - tr.t_start,
+                                args={"uid": g.uid, "bytes": wsize,
+                                      "kind": "switch-member"})
+                if ok:
+                    ok_members.append(g)
+                    t_ready = max(t_ready, t_done)
+                    t_first = max(t_first, profile_time_to(
+                        tr.profile, min(slot_bytes, wsize)))
+                else:
+                    failed.append((g.uid, t_done))
+            if not ok_members:
+                continue
+            self.result.switch_groups += 1
+            if sg.pseudo_uid is not None:
+                pod_state[sg.pseudo_uid] = {"sg": sg, "ok": ok_members,
+                                            "t_ready": t_ready,
+                                            "t_first": t_first}
+                continue
+            # pure switch: the pod sum drains straight to the server
+            tr2, t_done2, chain2, ok2 = self._deliver(
+                sg.switch, server, sg.drain_size, max(t_first, t_now),
+                uid=None, kind="aggregate", to_server=True)
+            self.result.bytes_to_server += sg.drain_size
+            self.result.bytes_in_network += sg.drain_size
+            self.result.switch_drains += 1
+            for g in ok_members:
+                info = self._inflight[g.uid]
+                info["agg_transfer"] = tr2
+                info["agg_chain"] = chain2
+                if ok2:
+                    commit[g.uid] = max(t_done2, t_ready)
+                else:
+                    failed.append((g.uid, t_done2))
+            self.trace.span(f"{sg.switch}->{server} (x{len(ok_members)})",
+                            cat="switch", track=sg.switch, ts=tr2.t_start,
+                            dur=tr2.t_end - tr2.t_start,
+                            args={"members": sorted(g.uid for g in ok_members),
+                                  "bytes": sg.drain_size, "pod": sg.pod,
+                                  "slots": sg.max_occupancy})
+
+        # -- host tier: spilled updates + (hierarchical) pod drains -------- #
+        host_plan = agg.host_plan
+        for grp in (host_plan.groups if host_plan is not None else []):
+            if grp.aggregator is None:
+                for g in grp.members:
+                    if g.uid < 0:
+                        self._enact_pod_drain(pod_state.get(g.uid), server,
+                                              t_now, commit, failed,
+                                              direct=True)
+                        continue
+                    tr, t_done, chain, ok = self._deliver(
+                        g.worker, server, g.size, max(g.t_avail, t_now),
+                        uid=g.uid, kind="direct", to_server=True)
+                    self.result.bytes_to_server += g.size
+                    self.result.bytes_in_network += g.size
+                    self._inflight[g.uid] = {"update": g, "aggregator": None,
+                                             "transfer": tr,
+                                             "xmit_chain": chain}
+                    self.trace.span(f"{g.worker}->{server}", cat="transfer",
+                                    track=g.worker, ts=tr.t_start,
+                                    dur=tr.t_end - tr.t_start,
+                                    args={"uid": g.uid, "bytes": g.size,
+                                          "kind": "direct"})
+                    if ok:
+                        commit[g.uid] = t_done
+                    else:
+                        failed.append((g.uid, t_done))
+                continue
+            # host aggregator group: real spilled members and/or pod drains
+            t_ready = t_now
+            agg_size = 0.0
+            ok_real: List[Update] = []
+            pods_in: List[dict] = []
+            for g in grp.members:
+                if g.uid < 0:
+                    st = pod_state.get(g.uid)
+                    if st is None:
+                        continue    # every member of the pod failed en route
+                    sg = st["sg"]
+                    tr, t_done, chain, ok = self._deliver(
+                        sg.switch, grp.aggregator, sg.drain_size,
+                        max(st["t_first"], t_now),
+                        uid=None, kind="member", to_server=False)
+                    self.result.bytes_in_network += sg.drain_size
+                    self.result.switch_drains += 1
+                    for m in st["ok"]:
+                        info = self._inflight[m.uid]
+                        info["agg_transfer"] = tr
+                        info["agg_chain"] = chain
+                        info["agg_to_server"] = False
+                        info["agg_hosts"] = (grp.aggregator,)
+                    self.trace.span(
+                        f"{sg.switch}->{grp.aggregator} "
+                        f"(x{len(st['ok'])})",
+                        cat="switch", track=sg.switch, ts=tr.t_start,
+                        dur=tr.t_end - tr.t_start,
+                        args={"members": sorted(m.uid for m in st["ok"]),
+                              "bytes": sg.drain_size, "pod": sg.pod,
+                              "slots": sg.max_occupancy})
+                    if ok:
+                        t_ready = max(t_ready, t_done, st["t_ready"])
+                        agg_size = max(agg_size, sg.drain_size)
+                        pods_in.append(st)
+                    else:
+                        for m in st["ok"]:
+                            failed.append((m.uid, t_done))
+                    continue
+                tr, t_done, chain, ok = self._deliver(
+                    g.worker, grp.aggregator, g.size, max(g.t_avail, t_now),
+                    uid=g.uid, kind="member", to_server=False)
+                self.result.bytes_in_network += g.size
+                self._inflight[g.uid] = {"update": g,
+                                         "aggregator": grp.aggregator,
+                                         "transfer": tr, "xmit_chain": chain}
+                self.trace.span(f"{g.worker}->{grp.aggregator}",
+                                cat="transfer", track=g.worker,
+                                ts=tr.t_start, dur=tr.t_end - tr.t_start,
+                                args={"uid": g.uid, "bytes": g.size,
+                                      "kind": "member"})
+                if ok:
+                    t_ready = max(t_ready, t_done)
+                    agg_size = max(agg_size, g.size)
+                    ok_real.append(g)
+                else:
+                    failed.append((g.uid, t_done))
+            if not (ok_real or pods_in):
+                continue
+            tr2, t_done2, chain2, ok2 = self._deliver(
+                grp.aggregator, server, agg_size, t_ready,
+                uid=None, kind="aggregate", to_server=True)
+            self.result.bytes_to_server += agg_size
+            self.result.bytes_in_network += agg_size
+            uids = []
+            for g in ok_real:
+                info = self._inflight[g.uid]
+                info["agg_transfer"] = tr2
+                info["agg_chain"] = chain2
+                uids.append(g.uid)
+                if ok2:
+                    commit[g.uid] = t_done2
+                else:
+                    failed.append((g.uid, t_done2))
+            for st in pods_in:
+                for m in st["ok"]:
+                    info = self._inflight.get(m.uid)
+                    if info is not None:
+                        info["agg2_transfer"] = tr2
+                        info["agg2_chain"] = chain2
+                    uids.append(m.uid)
+                    if ok2:
+                        commit[m.uid] = t_done2
+                    else:
+                        failed.append((m.uid, t_done2))
+            self.trace.span(f"{grp.aggregator}->{server} (x{len(uids)})",
+                            cat="aggregate", track=grp.aggregator,
+                            ts=tr2.t_start, dur=tr2.t_end - tr2.t_start,
+                            args={"members": sorted(uids),
+                                  "bytes": agg_size})
+
+        for uid, t_fail in failed:
+            self._push_event(t_fail, "transport_fail", uid=uid)
+        return commit
+
+    def _enact_pod_drain(self, st: Optional[dict], server: str, t_now: float,
+                         commit: Dict[int, float],
+                         failed: List[Tuple[int, float]], *,
+                         direct: bool) -> None:
+        """Drain one pod's sum directly to the server (the host tier put
+        the pseudo-update in the direct group)."""
+        if st is None:
+            return      # every member of the pod failed en route
+        sg = st["sg"]
+        tr, t_done, chain, ok = self._deliver(
+            sg.switch, server, sg.drain_size, max(st["t_first"], t_now),
+            uid=None, kind="aggregate", to_server=True)
+        self.result.bytes_to_server += sg.drain_size
+        self.result.bytes_in_network += sg.drain_size
+        self.result.switch_drains += 1
+        for m in st["ok"]:
+            info = self._inflight[m.uid]
+            info["agg_transfer"] = tr
+            info["agg_chain"] = chain
+            if ok:
+                commit[m.uid] = max(t_done, st["t_ready"])
+            else:
+                failed.append((m.uid, t_done))
+        self.trace.span(f"{sg.switch}->{server} (x{len(st['ok'])})",
+                        cat="switch", track=sg.switch, ts=tr.t_start,
+                        dur=tr.t_end - tr.t_start,
+                        args={"members": sorted(m.uid for m in st["ok"]),
+                              "bytes": sg.drain_size, "pod": sg.pod,
+                              "slots": sg.max_occupancy})
+
     def _deliver(self, src: str, dst: str, size: float, t_avail: float, *,
-                 uid: Optional[int], kind: str,
-                 to_server: bool) -> Tuple[Transfer, float, List[Transfer], bool]:
+                 uid: Optional[int], kind: str, to_server: bool,
+                 to_replica: bool = False,
+                 ) -> Tuple[Transfer, float, List[Transfer], bool]:
         """Reserve one payload transfer plus any transport repair rounds.
 
         Returns ``(tr, t_done, chain, ok)``: the principal reservation, the
@@ -1188,6 +1507,8 @@ class ClusterSim:
             self.result.bytes_in_network += remaining
             if to_server:
                 self.result.bytes_to_server += remaining
+            if to_replica:
+                self.result.bytes_to_replica += remaining
             self.trace.span(f"retry{rounds + 1} {src}->{dst}",
                             cat="transport", track=src, ts=rtr.t_start,
                             dur=rtr.t_end - rtr.t_start,
@@ -1253,22 +1574,44 @@ class ClusterSim:
         §9); a departed owner's copy is sourced from the server, which
         holds the committed update.  Returns the catch-up time — when the
         last copy of the frozen prefix lands (``t_now`` if nothing froze).
+
+        Copies ride the same lossy links as everything else: under an
+        active transport each copy pays retransmit/backoff costs through
+        :meth:`_deliver` (ROADMAP item 3 headroom closed).  Replication
+        can never *accept* loss — a partial copy would break the replica's
+        exact-prefix invariant — so a copy whose transport gives up
+        (deadline/retries) is re-sourced from the server once, on the
+        ideal path, after the failed attempt ends.
         """
         replica = self.cfg.replica
         t_catchup = t_now
         for u in rep.frozen:
             src = u.worker if u.worker not in self._dead else self.cfg.server
-            tr = self.net_actual.reserve(src, replica, u.size,
-                                         max(u.t_avail, t_now))
-            t_catchup = max(t_catchup, tr.t_end)
+            tr, t_done, chain, ok = self._deliver(
+                src, replica, u.size, max(u.t_avail, t_now),
+                uid=u.uid, kind="replica", to_server=False, to_replica=True)
             self.result.bytes_to_replica += u.size
             self.result.bytes_in_network += u.size
-            self._replica_inflight[u.uid] = {"update": u, "transfer": tr}
-            self._push_event(tr.t_end, "replica_arrive", uid=u.uid,
-                             epoch=self._replica_epoch.get(u.uid, 0))
+            self._replica_inflight[u.uid] = {"update": u, "transfer": tr,
+                                             "xmit_chain": chain}
             self.trace.span(f"{src}->{replica}", cat="replica", track=src,
                             ts=tr.t_start, dur=tr.t_end - tr.t_start,
                             args={"uid": u.uid, "bytes": u.size})
+            if not ok:
+                rtr = self.net_actual.reserve(self.cfg.server, replica,
+                                              u.size, t_done)
+                self.result.bytes_to_replica += u.size
+                self.result.bytes_in_network += u.size
+                self.result.replica_resourced += 1
+                self._replica_inflight[u.uid]["transfer"] = rtr
+                t_done = rtr.t_end
+                self.trace.span(f"{self.cfg.server}->{replica} (re-source)",
+                                cat="replica", track=self.cfg.server,
+                                ts=rtr.t_start, dur=rtr.t_end - rtr.t_start,
+                                args={"uid": u.uid, "bytes": u.size})
+            t_catchup = max(t_catchup, t_done)
+            self._push_event(t_done, "replica_arrive", uid=u.uid,
+                             epoch=self._replica_epoch.get(u.uid, 0))
         return t_catchup
 
     def _on_replica_arrive(self, t: float, uid: int, epoch: int = 0) -> None:

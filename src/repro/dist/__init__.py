@@ -17,7 +17,7 @@ Bridges the ``core/`` control plane (ordering, aggregation, replication
 """
 
 from . import collectives, compat, elastic, flatbuf, policy, sharding
-from .collectives import mlfabric_grad_reduce, plan_buckets
+from .collectives import loss_drop_mask, mlfabric_grad_reduce, plan_buckets
 from .flatbuf import (ErrorFeedback, FlatLayout, SparseChunk, pack_leaves,
                       plan_flat_layout, sparse_quantize, topk_sparsify)
 from .compat import AxisType, make_mesh, shard_map
@@ -27,7 +27,7 @@ from .policy import (PhaseLossCallback, PhaseLossPolicy, constrain,
 
 __all__ = [
     "collectives", "compat", "elastic", "flatbuf", "policy", "sharding",
-    "mlfabric_grad_reduce", "plan_buckets",
+    "loss_drop_mask", "mlfabric_grad_reduce", "plan_buckets",
     "ErrorFeedback", "FlatLayout", "SparseChunk", "pack_leaves",
     "plan_flat_layout", "sparse_quantize", "topk_sparsify",
     "AxisType", "make_mesh", "shard_map",

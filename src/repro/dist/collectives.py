@@ -35,13 +35,14 @@ see ``launch/steps.py:build_mlfabric_train_step``.
 
 from __future__ import annotations
 
-from typing import Any, List, Optional, Tuple
+from typing import Any, Callable, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..kernels import (dequant_aggregate_op, grad_aggregate_op, quantize_op,
-                       scatter_aggregate_op)
+                       scatter_aggregate_op, switch_sum_op)
 # Re-exported for backwards compatibility: the bucket planner grew into the
 # flat-layout planner and moved to flatbuf.py.
 from .flatbuf import (Bucket, FlatLayout, bucket_slice, pack_leaves,
@@ -50,13 +51,63 @@ from .flatbuf import (Bucket, FlatLayout, bucket_slice, pack_leaves,
 
 Params = Any
 
-__all__ = ["Bucket", "plan_buckets", "mlfabric_grad_reduce",
+__all__ = ["Bucket", "plan_buckets", "loss_drop_mask", "mlfabric_grad_reduce",
            "plan_reduce", "reduce_flat_buckets", "unpack_reduced"]
+
+BACKENDS = ("host", "switch", "hierarchical")
 
 
 # --------------------------------------------------------------------------- #
 # the aggregation hierarchy
 # --------------------------------------------------------------------------- #
+def _intra_pod_switch_sum(vec: jax.Array, intra_axis: str, *,
+                          window: int = 256) -> jax.Array:
+    """Intra-pod stage in switch mode: fixed-point in-network aggregation.
+
+    The pod switch only adds integers (DESIGN.md §13, SwitchML), so the
+    members agree on ONE shared scale — ``pmax`` of their amax — quantize
+    to int8 against it, and the switch (modeled by the windowed
+    ``kernels/switch_sum.py`` pass over the gathered wire payload) emits
+    exact int32 sums that any member dequantizes with the same scale.
+    Unlike the per-block compression of ``quantize_op``, the shared scale
+    makes the integer addition itself lossless: the only error is the one
+    initial rounding to the int8 grid.
+    """
+    d = vec.shape[0]
+    vec = vec.astype(jnp.float32)
+    amax = jax.lax.pmax(jnp.max(jnp.abs(vec)), intra_axis)
+    scale = jnp.maximum(amax / 127.0, 1e-30)
+    q = jnp.clip(jnp.round(vec / scale), -127, 127).astype(jnp.int8)
+    pad = (-d) % window
+    if pad:
+        q = jnp.pad(q, (0, pad))
+    qs = jax.lax.all_gather(q, intra_axis)       # [W, D_pad] int8 wire
+    s = switch_sum_op(qs, window=window, orig_len=d)
+    return s.astype(jnp.float32) * scale
+
+
+def loss_drop_mask(loss: Any, src: str, dst: str, t: float,
+                   k: int) -> np.ndarray:
+    """Derive the sparse wire's per-slot drop mask from the simulator's
+    :class:`~repro.core.network.LossSchedule`.
+
+    The schedule is a fluid model — ``instant_loss`` returns an expected
+    drop *rate* for the path at ``t`` — so the mask realizes that rate
+    deterministically: ``round(drop * k)`` of the ``k`` top-k slots,
+    evenly spaced across the payload (a burst on the wire hits slots
+    uniformly since top-k order is magnitude order, not position order).
+    This replaces the synthetic RNG masks earlier demos fed to
+    ``ErrorFeedback.compress`` — the simulator's loss policy and the data
+    path now describe the *same* wire, byte-for-byte.
+    """
+    drop, _ = loss.instant_loss(src, dst, t)
+    mask = np.zeros(k, dtype=bool)
+    n_drop = int(round(drop * k))
+    if n_drop > 0:
+        mask[np.floor(np.arange(n_drop) * (k / n_drop)).astype(int)] = True
+    return mask
+
+
 def _inter_pod_aggregate(vec: jax.Array, inter_axis: str, *,
                          compress: bool) -> jax.Array:
     """Cross-pod stage: gather every pod's partial aggregate and run the
@@ -83,7 +134,9 @@ def _inter_pod_aggregate(vec: jax.Array, inter_axis: str, *,
 
 
 def _inter_pod_aggregate_sparse(vec: jax.Array, inter_axis: str, *,
-                                keep: float) -> jax.Array:
+                                keep: float,
+                                drop_mask: Optional[Any] = None
+                                ) -> jax.Array:
     """Bounded-loss cross-pod stage: every pod ships only its top-k
     coordinates as ``(idx int32, q int8, scale f32)`` and the receiving
     host scatter-adds the sparse chunks into the dense bucket with the
@@ -95,11 +148,19 @@ def _inter_pod_aggregate_sparse(vec: jax.Array, inter_axis: str, *,
     ``ErrorFeedback`` state (``dist/flatbuf.py``) carries into its next
     update; the kernel also tolerates transport-dropped slots marked
     ``idx = -1``, which is how the simulator's bounded policy and this
-    data path describe the same wire format.
+    data path describe the same wire format.  ``drop_mask`` (bool [>=K],
+    typically from :func:`loss_drop_mask`) marks the slots the transport
+    lost in flight — they become ``idx = -1`` on the wire, exactly what
+    the receive kernel skips.
     """
     d = vec.shape[0]
     k = max(1, min(d, int(round(keep * d))))
     idx, vals = topk_sparsify(vec, k)
+    if drop_mask is not None:
+        drop = jnp.asarray(drop_mask, bool).ravel()[:k]
+        if drop.shape[0] < k:
+            drop = jnp.pad(drop, (0, k - drop.shape[0]))
+        idx = jnp.where(drop, -1, idx)
     q, scale = sparse_quantize(vals)
     idxs = jax.lax.all_gather(idx, inter_axis)       # [P, K] int32 wire
     qs = jax.lax.all_gather(q, inter_axis)           # [P, K] int8 wire
@@ -125,6 +186,9 @@ def reduce_flat_buckets(grads: Params, layout: FlatLayout, *,
                         intra_axis: str, inter_axis: Optional[str],
                         compress_inter: bool, mean_over: int,
                         keep_inter: Optional[float] = None,
+                        backend: str = "host",
+                        drop_mask_inter: Optional[
+                            Union[Callable[[int], Any], Any]] = None,
                         token: Optional[jax.Array] = None,
                         tracer: Any = None
                         ) -> Tuple[List[jax.Array], jax.Array]:
@@ -135,12 +199,29 @@ def reduce_flat_buckets(grads: Params, layout: FlatLayout, *,
     barrier chain over multiple gradient chunks, which is how the chunked
     backward keeps all its collectives in one planned issue order.
 
+    ``backend`` picks the aggregation mode, mirroring the control plane's
+    :class:`~repro.core.backends.AggregationBackend` seam: ``"host"`` is
+    the f32 intra-pod ``psum``; ``"switch"`` replaces it with the
+    fixed-point in-network sum (``_intra_pod_switch_sum``);
+    ``"hierarchical"`` additionally forces the compressed inter-pod stage
+    — pods ship int8 pseudo-updates to host aggregators, the same
+    two-tier shape the simulator's hierarchical backend plans.
+
+    ``drop_mask_inter`` feeds the sparse (``keep_inter``) stage's per-slot
+    transport drops: either a bool mask or a callable ``k -> mask`` (e.g.
+    ``functools.partial(loss_drop_mask, loss, src, dst, t)``) since the
+    top-k slot count varies per bucket.
+
     ``tracer`` (a ``repro.obs.trace.Tracer``) gets one ``bucket`` span per
     issued bucket.  This function usually runs under ``jit``, so the span
     clock is *issue* (trace-construction) wall-clock, not device time —
     what it shows is the planned SJF issue order and per-bucket payload,
     which is exactly the schedule MLfabric reasons about.
     """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; pick from {BACKENDS}")
+    if backend == "hierarchical":
+        compress_inter = True
     leaves = jax.tree_util.tree_leaves(grads)
     flat = pack_leaves(leaves)                       # single fused scatter
     if token is None:
@@ -156,11 +237,19 @@ def reduce_flat_buckets(grads: Params, layout: FlatLayout, *,
         # Chain each bucket on the previous one's result: the compiler
         # must issue the collectives in the planned (SJF) order.
         vec, token = jax.lax.optimization_barrier((vec, token))
-        vec = jax.lax.psum(vec, intra_axis)          # intra-pod reduce
+        if backend == "host":
+            vec = jax.lax.psum(vec, intra_axis)      # intra-pod reduce
+        else:
+            vec = _intra_pod_switch_sum(vec, intra_axis)
         if inter_axis is not None:
             if keep_inter is not None:
+                d_bkt = vec.shape[0]
+                k_top = max(1, min(d_bkt, int(round(keep_inter * d_bkt))))
+                mask = (drop_mask_inter(k_top) if callable(drop_mask_inter)
+                        else drop_mask_inter)
                 vec = _inter_pod_aggregate_sparse(vec, inter_axis,
-                                                  keep=keep_inter)
+                                                  keep=keep_inter,
+                                                  drop_mask=mask)
             else:
                 vec = _inter_pod_aggregate(vec, inter_axis,
                                            compress=compress_inter)
@@ -175,6 +264,7 @@ def reduce_flat_buckets(grads: Params, layout: FlatLayout, *,
                         args={"bucket": k, "bytes": b.nbytes,
                               "leaves": list(b.indices),
                               "inter": inter_axis or "",
+                              "backend": backend,
                               "compressed": bool(compress_inter),
                               "keep": keep_inter if keep_inter is not None
                               else 1.0})
@@ -199,15 +289,23 @@ def mlfabric_grad_reduce(grads: Params, *, intra_axis: str = "data",
                          shortest_first: bool = True,
                          compress_inter: bool = False,
                          keep_inter: Optional[float] = None,
+                         backend: str = "host",
+                         drop_mask_inter: Optional[
+                             Union[Callable[[int], Any], Any]] = None,
                          mean_over: int = 1, tracer: Any = None) -> Params:
     """Scheduled hierarchical mean of a gradient pytree.
 
     Numerically equivalent (to f32 reduction tolerance; int8 tolerance
-    with ``compress_inter``) to ``psum(grads) / mean_over`` over the
-    batch axes, but executed as an explicit flat-bucket schedule.  With
+    with ``compress_inter`` or a switch ``backend``) to
+    ``psum(grads) / mean_over`` over the batch axes, but executed as an
+    explicit flat-bucket schedule.  ``backend`` selects the intra-pod
+    aggregation mode ("host" f32 psum, "switch"/"hierarchical"
+    fixed-point in-network sum — see ``reduce_flat_buckets``).  With
     ``keep_inter`` the cross-pod stage ships only each pod's top-k
     fraction (the bounded-loss wire format) — deliberately lossy; pair it
-    with per-sender ``ErrorFeedback`` to carry the dropped mass forward.
+    with per-sender ``ErrorFeedback`` to carry the dropped mass forward,
+    and ``drop_mask_inter`` to realize the simulator's transport drops on
+    this wire.
     """
     if not jax.tree_util.tree_leaves(grads):
         return grads
@@ -216,5 +314,6 @@ def mlfabric_grad_reduce(grads: Params, *, intra_axis: str = "data",
     reduced, _ = reduce_flat_buckets(
         grads, layout, intra_axis=intra_axis, inter_axis=inter_axis,
         compress_inter=compress_inter, keep_inter=keep_inter,
+        backend=backend, drop_mask_inter=drop_mask_inter,
         mean_over=mean_over, tracer=tracer)
     return unpack_reduced(reduced, layout, grads)

@@ -8,6 +8,8 @@
 * ``quantize``           — int8 block quantization (gradient compression)
 * ``scatter_aggregate``  — sparse top-k int8 chunks -> dense scatter-add
                            + norm (the bounded-loss transport receive path)
+* ``switch_sum``         — windowed int8 -> int32 fixed-point summation
+                           (the SwitchML-style in-network aggregation mode)
 
 Each has: the kernel (pl.pallas_call + BlockSpec), a jit wrapper in
 ``ops.py`` (interpret-mode on CPU), and a pure-jnp oracle in ``ref.py``.
@@ -15,8 +17,8 @@ Each has: the kernel (pl.pallas_call + BlockSpec), a jit wrapper in
 
 from .ops import (compress_update, dequant_aggregate_op, dequantize_op,
                   flash_attention_op, grad_aggregate_op, quantize_op,
-                  scatter_aggregate_op)
+                  scatter_aggregate_op, switch_sum_op)
 
 __all__ = ["compress_update", "dequant_aggregate_op", "dequantize_op",
            "flash_attention_op", "grad_aggregate_op", "quantize_op",
-           "scatter_aggregate_op"]
+           "scatter_aggregate_op", "switch_sum_op"]

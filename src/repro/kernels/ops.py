@@ -20,6 +20,7 @@ from .flash_attention import flash_attention as _flash
 from .grad_aggregate import grad_aggregate as _agg
 from .quantize import dequantize as _dequant, quantize as _quant
 from .scatter_aggregate import scatter_aggregate as _scatter_agg
+from .switch_sum import switch_sum as _switch_sum
 
 
 def _on_tpu() -> bool:
@@ -71,6 +72,18 @@ def scatter_aggregate_op(idx, q, scales, weights, *, d_out: int,
                         interpret=not _on_tpu())
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("window", "block_d", "chunk_n",
+                                    "orig_len"))
+def switch_sum_op(q, *, window: int = 256, block_d: int = 2048,
+                  chunk_n: int = 8, orig_len: Optional[int] = None):
+    """In-network switch aggregation: windowed int8 member payloads ->
+    int32 pod sums (one shared scale makes the integer add exact; the
+    int32 widening absorbs fan-in overflow — see switch_sum.py)."""
+    return _switch_sum(q, window=window, block_d=block_d, chunk_n=chunk_n,
+                       orig_len=orig_len, interpret=not _on_tpu())
+
+
 @functools.partial(jax.jit, static_argnames=("block",))
 def quantize_op(x, *, block: int = 256):
     d = x.shape[0]
@@ -101,3 +114,4 @@ grad_aggregate_ref = ref.grad_aggregate_ref
 quantize_ref = ref.quantize_ref
 dequantize_ref = ref.dequantize_ref
 scatter_aggregate_ref = ref.scatter_aggregate_ref
+switch_sum_ref = ref.switch_sum_ref

@@ -76,6 +76,18 @@ def scatter_aggregate_ref(idx: jax.Array, q: jax.Array, scales: jax.Array,
     return agg, jnp.sum(jnp.square(agg))
 
 
+def switch_sum_ref(q: jax.Array, *,
+                   orig_len: Optional[int] = None) -> jax.Array:
+    """Fixed-point switch aggregation oracle (overflow-widened).
+
+    q: [N, D_pad] int8 (members quantized with one shared scale)
+    -> int32 sums [orig_len or D_pad].  The widening is the whole point:
+    int8 accumulators would saturate at two members sending ±127.
+    """
+    s = jnp.sum(q.astype(jnp.int32), axis=0)
+    return s[:orig_len] if orig_len is not None else s
+
+
 def quantize_ref(x: jax.Array, *, block: int = 256
                  ) -> Tuple[jax.Array, jax.Array]:
     """Block-wise symmetric int8 quantization (gradient compression).

@@ -134,6 +134,24 @@ def congestion_loss(workers: Sequence[str], *, start: float = 3.0,
     return Scenario(events, name=name)
 
 
+def pod_stress(n_workers: int, *, start: float = 0.5,
+               server_down=gbps(2.5), server_up=gbps(10),
+               recover_at: Optional[float] = None, high=gbps(10),
+               name: str = "pod-stress") -> Scenario:
+    """The pod-heavy regime: the server's *downlink* collapses to
+    ``server_down`` at ``start`` (an incast-congested ToR port) while
+    every worker NIC stays fast, so total cross-fabric fan-in — not any
+    member uplink — bounds the makespan.  This is the regime in-network
+    aggregation is built for: a pod switch pre-sums its members so the
+    server ingests one drained pseudo-update per pod (int8 wire) instead
+    of ``pod_size`` f32 updates, and the hierarchical backend's host tier
+    schedules those few drains over the choked downlink."""
+    events = bandwidth_trace("server", [(start, server_up, server_down)])
+    if recover_at is not None:
+        events += bandwidth_trace("server", [(recover_at, high, high)])
+    return Scenario(events, name=name)
+
+
 def paper_dynamic_cluster(n_workers: int, *, seed: int = 0,
                           horizon: float = 30.0,
                           name: str = "paper-dynamic-cluster") -> Scenario:
@@ -152,4 +170,4 @@ def paper_dynamic_cluster(n_workers: int, *, seed: int = 0,
 
 __all__ = ["churn", "aggregator_outage", "flash_crowd", "congestion_wave",
            "burst_loss", "congestion_loss", "degraded_monitor",
-           "server_failover", "paper_dynamic_cluster"]
+           "pod_stress", "server_failover", "paper_dynamic_cluster"]

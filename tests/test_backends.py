@@ -1,0 +1,259 @@
+"""The AggregationBackend seam (core/backends.py).
+
+Three families:
+
+1. **Golden equivalence** — ``HostBackend.plan`` must be *equal*, not just
+   equivalent, to calling :func:`aggregate_updates` directly: same
+   makespan, same assignment, same commit times, same group structure,
+   over a seeded random corpus covering both objectives and planners.
+   This is the refactor's contract (the golden traces pin the integrated
+   ClusterSim behavior; this pins the seam itself) and the CI gate runs
+   it with ``-k Golden`` next to the golden-trace test.
+2. **Switch plan invariants** — the fluid slot model respects the pool
+   bound, spills on exhaustion instead of over-admitting, prices the wire
+   at the int8 factor, and orders commits after both the drain and the
+   slowest member stream; hierarchical commits ride the host tier.
+3. **SwitchFail integration** — a dead switch reroutes its pod to the
+   host path mid-run and the cluster keeps committing.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (ClusterSim, SchedulerConfig, SwitchConfig, SwitchFail,
+                        Scenario, mb)
+from repro.core.aggregation import aggregate_updates
+from repro.core.backends import (INT8_WIRE_FACTOR, HostBackend, SwitchBackend,
+                                 SwitchPlanResult, make_backend,
+                                 profile_bytes_by, profile_time_to)
+from repro.core.network import NetworkState
+from repro.core.ordering import Update
+from repro.core.simulator import StragglerModel
+
+
+def _instance(seed, *, n_max=10, prefix="w"):
+    """One random planning instance: (network, updates, aggregators)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, n_max + 1))
+    n_aggs = int(rng.integers(0, 4))
+    net = NetworkState([], default_bw=100.0)
+    net.add_host("s", float(rng.choice([25.0, 50.0, 100.0])))
+    aggs = [f"a{i}" for i in range(n_aggs)]
+    for a in aggs:
+        net.add_host(a, float(rng.choice([10.0, 50.0, 100.0])))
+    ups = []
+    for i in range(n):
+        net.add_host(f"{prefix}{i}", float(rng.choice([10.0, 50.0, 100.0])))
+        ups.append(Update(uid=i, worker=f"{prefix}{i}",
+                          size=float(rng.uniform(10.0, 500.0)),
+                          version=0, norm=1.0,
+                          t_avail=float(rng.uniform(0.0, 2.0))))
+    return net, ups, aggs
+
+
+class TestHostBackendGoldenEquivalence:
+    @pytest.mark.parametrize("seed", range(30))
+    @pytest.mark.parametrize("objective,planner", [
+        ("makespan", "incremental"), ("makespan", "exhaustive"),
+        ("avg_commit", "incremental")])
+    def test_plan_equals_direct_call(self, seed, objective, planner):
+        net, ups, aggs = _instance(seed)
+        direct = aggregate_updates(ups, net, "s", aggs, t_now=0.5,
+                                   objective=objective, planner=planner)
+        seam = HostBackend().plan(ups, net, "s", aggs, t_now=0.5,
+                                  objective=objective, planner=planner)
+        assert seam.makespan == direct.makespan
+        assert seam.assignment == direct.assignment
+        assert seam.commit_times == direct.commit_times
+        assert len(seam.groups) == len(direct.groups)
+        for gs, gd in zip(seam.groups, direct.groups):
+            assert gs.aggregator == gd.aggregator
+            assert [m.uid for m in gs.members] == [m.uid for m in gd.members]
+            assert ([t.t_end for t in gs.member_transfers]
+                    == [t.t_end for t in gd.member_transfers])
+
+    def test_default_config_builds_host_backend(self):
+        cfg = SchedulerConfig(server="s", aggregators=[])
+        assert isinstance(make_backend(cfg), HostBackend)
+        with pytest.raises(ValueError):
+            make_backend(SchedulerConfig(server="s", aggregators=[],
+                                         backend="bogus"))
+
+
+def _pod_net(n, *, pods, bw=100.0, server_bw=100.0):
+    net = NetworkState([], default_bw=bw)
+    net.add_host("server", server_bw)
+    for i in range(n):
+        net.add_host(f"worker{i}", bw)
+    for p in range(pods):
+        net.add_host(f"switch{p}", bw)
+    return net
+
+
+def _pod_updates(n, size=100.0):
+    return [Update(uid=i, worker=f"worker{i}", size=size, version=0,
+                   norm=1.0, t_avail=0.0) for i in range(n)]
+
+
+class TestSwitchPlanInvariants:
+    def test_wire_is_int8_priced(self):
+        be = SwitchBackend(SwitchConfig(pod_size=4))
+        u = _pod_updates(1)[0]
+        assert be.wire_size(u) == pytest.approx(u.size * INT8_WIRE_FACTOR)
+        assert INT8_WIRE_FACTOR == pytest.approx(0.25390625)
+
+    def test_pure_switch_plan_shape(self):
+        cfg = SwitchConfig(pod_size=4, pool_slots=8, slot_bytes=4.0)
+        be = SwitchBackend(cfg)
+        net = _pod_net(8, pods=2)
+        res = be.plan(_pod_updates(8), net, "server", [], t_now=0.0)
+        assert isinstance(res, SwitchPlanResult)
+        assert len(res.switch_groups) == 2 and not res.spill_count
+        for sg in res.switch_groups:
+            assert sg.max_occupancy <= cfg.pool_slots
+            assert sg.drain_transfer is not None
+            assert sg.drain_size == pytest.approx(
+                cfg.wire_factor * max(m.size for m in sg.members))
+            # the drain cannot start before any member completed window 1
+            for tr, m in zip(sg.member_transfers, sg.members):
+                w1 = min(cfg.slot_bytes, sg.wire_sizes[m.uid])
+                assert (sg.t_first_window
+                        >= profile_time_to(tr.profile, w1) - 1e-9)
+            for m in sg.members:
+                c = res.commit_times[m.uid]
+                assert c >= sg.drain_transfer.t_end - 1e-9
+                assert c >= sg.t_ready - 1e-9
+        assert res.makespan == pytest.approx(max(res.commit_times.values()))
+        # every real uid is assigned, and to a switch group
+        assert sorted(res.assignment) == list(range(8))
+
+    def test_tiny_pool_spills_to_host_path(self):
+        """pool_slots=1 with a slot far smaller than the wire payload
+        cannot hold a whole pod concurrently: later members must spill,
+        and the spilled uids get host-tier (direct/aggregator) service."""
+        cfg = SwitchConfig(pod_size=8, pool_slots=1, slot_bytes=1.0)
+        be = SwitchBackend(cfg)
+        net = _pod_net(8, pods=1)
+        res = be.plan(_pod_updates(8), net, "server", ["worker0"])
+        assert res.spill_count > 0
+        assert res.spilled_uids
+        for uid in res.spilled_uids:
+            gi = res.assignment[uid]
+            assert res.groups[gi].aggregator != "switch0"
+            assert uid in res.commit_times
+        # admitted members still respect the bound
+        for sg in res.switch_groups:
+            assert 0 < sg.max_occupancy <= cfg.pool_slots
+
+    def test_occupancy_model_breakpoints(self):
+        """Sanity of the fluid helpers the admission check rests on."""
+        net = _pod_net(2, pods=1)
+        tr = net.plan_transfer("worker0", "switch0", 50.0, 0.0)
+        assert profile_bytes_by(tr.profile, tr.t_end) == pytest.approx(50.0)
+        assert profile_time_to(tr.profile, 50.0) == pytest.approx(tr.t_end)
+        assert profile_time_to(tr.profile, 0.0) == tr.profile.t_start
+
+    def test_dead_switch_spills_whole_pod(self):
+        be = SwitchBackend(SwitchConfig(pod_size=4))
+        be.dead_switches.add("switch0")
+        net = _pod_net(8, pods=2)
+        res = be.plan(_pod_updates(8), net, "server", [])
+        assert len(res.switch_groups) == 1
+        assert res.switch_groups[0].switch == "switch1"
+        assert res.spilled_uids == frozenset(range(4))
+
+    def test_hierarchical_commits_ride_host_tier(self):
+        cfg = SwitchConfig(pod_size=4)
+        be = SwitchBackend(cfg, hierarchical=True)
+        net = _pod_net(8, pods=2)
+        res = be.plan(_pod_updates(8), net, "server", ["worker0"])
+        assert res.host_plan is not None and res.pseudo_members
+        for puid, sg in res.pseudo_members.items():
+            assert puid == -(sg.pod + 1)
+            host_commit = res.host_plan.commit_times[puid]
+            for m in sg.members:
+                assert res.commit_times[m.uid] == pytest.approx(
+                    max(host_commit, sg.t_ready))
+        # pseudo uids never leak into the combined real-uid view
+        assert all(uid >= 0 for uid in res.assignment)
+        assert all(uid >= 0 for uid in res.commit_times)
+
+
+class TestSwitchFailIntegration:
+    def _run(self, scenario=None, backend="switch"):
+        cfg = SchedulerConfig(server="server",
+                              aggregators=["worker0", "worker1"],
+                              tau_max=100, mode="async", batch_interval=0.5,
+                              backend=backend,
+                              switch=SwitchConfig(pod_size=4))
+        return ClusterSim(8, cfg, update_size=mb(50), compute_time=0.05,
+                          straggler=StragglerModel(0, 1), seed=3,
+                          scenario=scenario).run(until_time=6.0)
+
+    def test_switch_fail_reroutes_and_commits_continue(self):
+        res = self._run(Scenario([SwitchFail(time=2.0, switch="switch0")],
+                                 name="switch-fail"))
+        assert res.metrics.counter("switch/fails").value == 1
+        healthy = self._run()
+        assert healthy.metrics.counter("switch/fails").value == 0
+        # losing a pod switch costs throughput but must not stall commits
+        assert 0 < res.n_commits <= healthy.n_commits
+        assert res.switch_drains < healthy.switch_drains
+
+    def test_hierarchical_run_commits(self):
+        res = self._run(backend="hierarchical")
+        assert res.n_commits > 0 and res.switch_groups > 0
+
+
+class TestSamePodRosterRefill:
+    """Satellite fix: a joiner refills a failed aggregator slot, but with a
+    switch topology the vacancy remembers the failed host's pod — a
+    cross-pod joiner must not take it (that would silently move
+    aggregation traffic across the pod boundary), while the original
+    host rejoining from the same pod must."""
+
+    def _sim(self, events):
+        cfg = SchedulerConfig(server="server",
+                              aggregators=["worker0", "worker4"],
+                              tau_max=100, mode="async", batch_interval=0.5,
+                              backend="switch",
+                              switch=SwitchConfig(pod_size=4))
+        sim = ClusterSim(8, cfg, update_size=mb(10), compute_time=0.05,
+                         straggler=StragglerModel(0, 1), seed=3,
+                         scenario=Scenario(events, name="refill"))
+        sim.run(until_time=5.0)
+        return sim
+
+    def test_cross_pod_joiner_skips_pod_tagged_vacancy(self):
+        from repro.core.scenario import AggregatorFail, WorkerJoin
+        # worker0 (pod 0) fails as aggregator; the fresh joiner becomes
+        # worker8 (pod 2) and must leave the pod-0 vacancy open
+        sim = self._sim([AggregatorFail(time=1.0, host="worker0"),
+                         WorkerJoin(time=2.0)])
+        assert sim.aggregators == ["worker4"]
+        assert sim._agg_vacancy_pods == [0]
+
+    def test_same_pod_rejoiner_takes_the_slot(self):
+        from repro.core.scenario import (AggregatorFail, WorkerJoin,
+                                         WorkerLeave)
+        sim = self._sim([AggregatorFail(time=1.0, host="worker0"),
+                         WorkerLeave(time=1.2, worker="worker1"),
+                         WorkerJoin(time=2.0),            # worker8, pod 2
+                         WorkerJoin(time=3.0, worker="worker1")])  # pod 0
+        assert sim.aggregators == ["worker4", "worker1"]
+        assert sim._agg_vacancy_pods == []
+
+    def test_host_mode_refill_is_fifo(self):
+        """Without a switch topology every vacancy is untagged: the first
+        joiner refills, exactly the pre-seam behavior the goldens pin."""
+        from repro.core.scenario import AggregatorFail, WorkerJoin
+        cfg = SchedulerConfig(server="server",
+                              aggregators=["worker0", "worker4"],
+                              tau_max=100, mode="async", batch_interval=0.5)
+        sim = ClusterSim(8, cfg, update_size=mb(10), compute_time=0.05,
+                         straggler=StragglerModel(0, 1), seed=3,
+                         scenario=Scenario(
+                             [AggregatorFail(time=1.0, host="worker0"),
+                              WorkerJoin(time=2.0)], name="refill"))
+        sim.run(until_time=4.0)
+        assert sim.aggregators == ["worker4", "worker8"]

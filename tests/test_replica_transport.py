@@ -1,0 +1,73 @@
+"""Replica copies ride the transport tier (ROADMAP item 3's last gap).
+
+Before PR9 the server->replica copy was reserved on the ideal lossless
+path: a ``burst_loss`` episode on the replica's downlink stretched nothing
+and retransmitted nothing, silently under-modeling §5.3's divergence
+bound (a lossy replica link *should* slow replication down and widen the
+divergence window).  Now the copy goes through ``_deliver`` like every
+other transfer: reliable mode retransmits the lost bytes on the residual
+link, the retransmitted bytes land in ``bytes_to_replica``, and the
+zero-loss goldens stay untouched (asserted by
+tests/test_transport.py::TestZeroLossGoldenIdentity).
+"""
+
+import pytest
+
+from repro.core.scenario import PacketLoss, Scenario
+from repro.core.scheduler import SchedulerConfig
+from repro.core.simulator import (ClusterSim, StragglerModel,
+                                  TransportConfig, mb)
+
+pytestmark = pytest.mark.lossy
+
+
+def _run(scenario=None, transport=None, horizon=8.0):
+    cfg = SchedulerConfig(server="server", aggregators=["worker0", "worker1"],
+                          tau_max=30, mode="async", batch_interval=0.25,
+                          replica="replica", replica_aggregators=(),
+                          div_max=4.0, gamma=0.9)
+    return ClusterSim(8, cfg, update_size=mb(50), compute_time=0.05,
+                      straggler=StragglerModel(0, 1), seed=3,
+                      scenario=scenario, transport=transport,
+                      ).run(until_time=horizon)
+
+
+def _replica_bursts(rate=0.4):
+    """Loss bursts pinned to the replica's downlink only — the workers'
+    and server's links stay clean, so any retransmit is replica traffic."""
+    return Scenario([PacketLoss(time=1.0, host="replica", rate=rate,
+                                until=4.0, direction="down")],
+                    name="replica-burst")
+
+
+class TestReplicaTransport:
+    def test_clean_link_replicates_without_retransmits(self):
+        res = _run(transport=TransportConfig(policy="reliable"))
+        assert res.replica_commits > 0
+        assert res.retransmits == 0
+        assert res.bytes_to_replica > 0
+
+    def test_lossy_replica_link_retransmits(self):
+        """The regression this file pins: loss on the replica downlink now
+        produces retransmit work and extra replica bytes instead of being
+        silently ignored by an ideal-path reservation."""
+        clean = _run(transport=TransportConfig(policy="reliable"))
+        lossy = _run(scenario=_replica_bursts(),
+                     transport=TransportConfig(policy="reliable"))
+        assert lossy.retransmits > 0
+        assert lossy.metrics.counter(
+            "transport/bytes_retransmitted").value > 0
+        # retransmitted copy bytes are charged to the replica account
+        assert (lossy.bytes_to_replica / max(1, lossy.replica_commits)
+                > clean.bytes_to_replica / max(1, clean.replica_commits))
+        # replication still makes progress through the bursts
+        assert lossy.replica_commits > 0
+
+    def test_lossless_policy_measures_but_delivers(self):
+        """The idealized-fabric policy records the loss it *would* have
+        suffered on the replica link without repairing or slowing."""
+        res = _run(scenario=_replica_bursts(),
+                   transport=TransportConfig(policy="lossless"))
+        assert res.retransmits == 0
+        assert res.metrics.counter("transport/bytes_lost").value > 0
+        assert res.replica_commits > 0

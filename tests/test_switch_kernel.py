@@ -1,0 +1,69 @@
+"""Numerics for the windowed fixed-point switch-sum kernel (the in-network
+aggregation data plane): the Pallas kernel must equal the int32 oracle
+exactly — integer sums, not allclose — across ragged member chunks, ragged
+``orig_len`` outputs, window-clamped ``block_d`` and the overflow regime an
+int8 accumulator could not survive.  The end of the file checks the
+round-trip the dist layer performs: shared-scale quantize -> switch sum ->
+dequantize approximates the f32 mean.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref, switch_sum_op
+
+pytestmark = pytest.mark.pallas_interpret
+
+
+def _q(n, d, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(-127, 128, size=(n, d)), jnp.int8)
+
+
+class TestSwitchSumMatchesOracle:
+    @pytest.mark.parametrize("n,d,window,block_d,chunk_n", [
+        (1, 256, 256, 2048, 8),      # single member, single window
+        (8, 2048, 256, 2048, 8),     # even everything
+        (5, 1792, 256, 512, 2),      # multiple D tiles, ragged N chunk
+        (300, 1024, 256, 2048, 8),   # deep fan-in (overflow territory)
+        (3, 512, 256, 300, 4),       # block_d not a window multiple: clamps
+        (16, 256, 128, 2048, 16),    # non-default window
+    ])
+    def test_exact_integer_sums(self, n, d, window, block_d, chunk_n):
+        q = _q(n, d)
+        got = switch_sum_op(q, window=window, block_d=block_d,
+                            chunk_n=chunk_n)
+        want = ref.switch_sum_ref(q)
+        assert got.dtype == jnp.int32 and got.shape == (d,)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_overflow_widening(self):
+        """300 members all sending +127 must produce 38100 — far beyond
+        int8 (and int16 at larger fan-in would go too); the int32
+        accumulator is the point of the kernel."""
+        n, d = 300, 512
+        q = jnp.full((n, d), 127, jnp.int8)
+        got = np.asarray(switch_sum_op(q))
+        assert got.max() == got.min() == n * 127 == 38100
+
+    def test_ragged_orig_len(self):
+        """orig_len slices the padded wire back to the bucket length; the
+        padded tail must not leak into the kept lanes."""
+        q = _q(7, 2048, seed=3)
+        got = switch_sum_op(q, orig_len=2000)
+        want = ref.switch_sum_ref(q, orig_len=2000)
+        assert got.shape == (2000,)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_shared_scale_roundtrip_tracks_f32_mean(self):
+        """The dist layer's switch mode: one shared scale (pmax of member
+        amax), int8 quantize, switch sum, dequantize — approximates the
+        f32 mean to int8-grid tolerance."""
+        rng = np.random.default_rng(11)
+        vecs = rng.normal(size=(6, 1536)).astype(np.float32)
+        scale = max(np.abs(vecs).max() / 127.0, 1e-30)
+        q = jnp.asarray(np.clip(np.round(vecs / scale), -127, 127), jnp.int8)
+        s = np.asarray(switch_sum_op(q)).astype(np.float32) * scale
+        np.testing.assert_allclose(s / 6, vecs.mean(axis=0),
+                                   atol=scale, rtol=0)
