@@ -1,0 +1,190 @@
+"""Aggregate every BENCH_*.json record into one validated trajectory.
+
+Each PR's bench run writes canonical ``BENCH_*.json`` records at the repo
+root plus timestamped copies under ``runs/bench/`` (see
+``repro.obs.bench_schema.write_bench_record``).  This tool folds all of
+them into a single ``BENCH_HISTORY.json`` — the bench *trajectory*: one
+entry per record, ordered by creation time, carrying the record's
+identity (name / created / git SHA / config) and a flattened summary of
+its scalar results.  Large nested curves (e.g. the planner-latency-vs-U
+sweep) are summarized to their scalar leaves, so the history stays small
+while every headline number remains grep-able across PRs.
+
+The output is itself a schema-validated bench record (name
+``bench_history``), and CI regenerates + validates it on every run::
+
+    PYTHONPATH=src python benchmarks/history.py --out BENCH_HISTORY.json
+    PYTHONPATH=src python benchmarks/history.py --check BENCH_HISTORY.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Any, Dict, List, Optional
+
+sys.path.insert(0, "src")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs.bench_schema import (bench_record, validate_bench_record,
+                                    write_bench_record)
+
+#: Flattened-scalar cap per entry: keeps the history bounded even if a
+#: record ships a huge table (drops are counted, never silent).
+MAX_SCALARS = 400
+
+
+def discover(root: str = ".") -> List[str]:
+    """Canonical records at the root plus timestamped runs/bench copies."""
+    canonical = sorted(p for p in glob.glob(os.path.join(root, "BENCH_*.json"))
+                       if os.path.basename(p) != "BENCH_HISTORY.json")
+    archived = sorted(
+        p for p in glob.glob(os.path.join(root, "runs", "bench", "*.json"))
+        if not os.path.basename(p).startswith("bench_history"))
+    return canonical + archived
+
+
+def _flatten(obj: Any, prefix: str, out: Dict[str, Any]) -> None:
+    """Dotted-key scalar leaves of a nested results payload.
+
+    Lists are indexed only when short (<= 8 items); longer numeric lists
+    are summarized as ``.len``/``.min``/``.max`` so sweeps don't bloat
+    the history.
+    """
+    if isinstance(obj, dict):
+        for k in sorted(obj):
+            _flatten(obj[k], f"{prefix}.{k}" if prefix else str(k), out)
+    elif isinstance(obj, list):
+        nums = [x for x in obj if isinstance(x, (int, float))
+                and not isinstance(x, bool)]
+        if len(obj) > 8 and len(nums) == len(obj):
+            out[f"{prefix}.len"] = len(obj)
+            if nums:
+                out[f"{prefix}.min"] = min(nums)
+                out[f"{prefix}.max"] = max(nums)
+        elif len(obj) <= 8:
+            for i, x in enumerate(obj):
+                _flatten(x, f"{prefix}[{i}]", out)
+        else:
+            out[f"{prefix}.len"] = len(obj)
+    elif isinstance(obj, (int, float, bool)) or obj is None:
+        out[prefix] = obj
+    elif isinstance(obj, str):
+        if len(obj) <= 120:
+            out[prefix] = obj
+
+
+def summarize(results: Any) -> Dict[str, Any]:
+    flat: Dict[str, Any] = {}
+    _flatten(results, "", flat)
+    if len(flat) <= MAX_SCALARS:
+        return {"scalars": flat, "dropped_scalars": 0}
+    keys = sorted(flat)[:MAX_SCALARS]
+    return {"scalars": {k: flat[k] for k in keys},
+            "dropped_scalars": len(flat) - MAX_SCALARS}
+
+
+def build_history(paths: List[str]) -> Dict[str, Any]:
+    entries: List[Dict[str, Any]] = []
+    skipped: List[Dict[str, str]] = []
+    for p in paths:
+        try:
+            with open(p) as f:
+                rec = json.load(f)
+        except (OSError, ValueError) as exc:
+            skipped.append({"path": p, "reason": f"unreadable: {exc}"})
+            continue
+        problems = validate_bench_record(rec)
+        if problems:
+            skipped.append({"path": p, "reason": "; ".join(problems)})
+            continue
+        entries.append({
+            "source": p.replace(os.sep, "/"),
+            "name": rec["name"],
+            "created": rec["created"],
+            "git_sha": rec.get("git_sha"),
+            "schema_version": rec["schema_version"],
+            "config": rec.get("config", {}),
+            "summary": summarize(rec.get("results", {})),
+        })
+    entries.sort(key=lambda e: (e["created"], e["name"], e["source"]))
+    return bench_record(
+        "bench_history",
+        config={"sources": len(paths), "skipped": skipped},
+        results={"n_entries": len(entries), "entries": entries})
+
+
+def validate_history(obj: Any) -> List[str]:
+    """Structural validation of a BENCH_HISTORY.json object."""
+    problems = validate_bench_record(obj)
+    if problems:
+        return problems
+    if obj.get("name") != "bench_history":
+        problems.append(f"name is {obj.get('name')!r}, "
+                        "expected 'bench_history'")
+    results = obj.get("results", {})
+    entries = results.get("entries")
+    if not isinstance(entries, list):
+        return problems + ["results.entries is not a list"]
+    if results.get("n_entries") != len(entries):
+        problems.append("n_entries does not match len(entries)")
+    last_key = None
+    for i, e in enumerate(entries):
+        where = f"entries[{i}]"
+        if not isinstance(e, dict):
+            problems.append(f"{where}: not an object")
+            continue
+        for key in ("source", "name", "created", "schema_version",
+                    "summary"):
+            if key not in e:
+                problems.append(f"{where}: missing {key}")
+        key = (e.get("created") or "", e.get("name") or "",
+               e.get("source") or "")
+        if last_key is not None and key < last_key:
+            problems.append(f"{where}: trajectory not sorted by created")
+        last_key = key
+    return problems
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--root", default=".",
+                    help="repo root to scan for BENCH_*.json")
+    ap.add_argument("--out", default=None,
+                    help="write the aggregated BENCH_HISTORY.json here")
+    ap.add_argument("--check", default=None,
+                    help="validate an existing BENCH_HISTORY.json and exit")
+    ns = ap.parse_args(argv)
+
+    if ns.check:
+        with open(ns.check) as f:
+            obj = json.load(f)
+        problems = validate_history(obj)
+        if problems:
+            for p in problems:
+                print(f"INVALID: {p}", file=sys.stderr)
+            return 1
+        n = obj["results"]["n_entries"]
+        print(f"{ns.check}: valid bench trajectory, {n} entries")
+        return 0
+
+    paths = discover(ns.root)
+    hist = build_history(paths)
+    problems = validate_history(hist)
+    if problems:
+        for p in problems:
+            print(f"INTERNAL: {p}", file=sys.stderr)
+        return 1
+    if ns.out:
+        for p in write_bench_record(hist, ns.out):
+            print(f"wrote {p}")
+    else:
+        print(json.dumps(hist, indent=2, sort_keys=True))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -820,6 +820,95 @@ def bench_switch_aggregation(out: dict, *, fast: bool = False):
            f"hier_beats_host={hier_wins};" + cells)
 
 
+def bench_bottleneck_attribution(out: dict, *, fast: bool = False):
+    """PR10 tentpole: the critical-path attribution engine validated on a
+    known-by-construction scenario.  ``pod_stress`` chokes the server
+    downlink at t=0.5 — so under the host backend the engine MUST blame
+    ``server:down`` (every f32 update or aggregate crosses it), and under
+    the hierarchical backend (0.254x int8 wire, one drain per pod) the
+    transmission share of the critical path must collapse (the network
+    stops being the bottleneck — consistent with BENCH_PR9's 3.2x win on
+    the same preset).  Both claims are asserted here AND in
+    tests/test_critpath.py; the per-commit phase decompositions are
+    checked to sum to time-to-commit within 1e-6.  The host-backend
+    report is written to ``runs/bottleneck_pod_stress.json`` (the CI
+    attribution artifact)."""
+    from repro.core import SwitchConfig
+    from repro.obs import CritPathCallback, compare_reports, write_report
+    from repro.scenarios import pod_stress
+
+    n = 12 if fast else 16
+    pod = 4
+    target = 60 if fast else 200
+    horizon = 60.0
+    t0 = time.perf_counter()
+    reports = {}
+    identity_worst = 0.0
+    counter_events = 0
+    for backend in ("host", "hierarchical"):
+        cb = CritPathCallback(name=f"pod_stress_{backend}")
+        tracer = Tracer(process_name="mlfabric-critpath")
+        hooks = HookBus([cb], tracer=tracer)
+        cfg = SchedulerConfig(server="server",
+                              aggregators=["worker0", "worker1"],
+                              tau_max=100, mode="async", batch_interval=0.5,
+                              backend=backend,
+                              switch=SwitchConfig(pod_size=pod))
+        ClusterSim(n, cfg, update_size=mb(100), compute_time=0.05,
+                   straggler=C2, bandwidth=N2, seed=7,
+                   scenario=pod_stress(n, server_down=gbps(2.5)),
+                   hooks=hooks).run(until_time=horizon,
+                                    until_commits=target)
+        reports[backend] = cb.report
+        identity_worst = max(
+            identity_worst,
+            max((p.identity_error() for p in cb.collector.paths),
+                default=0.0))
+        counter_events += sum(1 for e in tracer.events if e.counter)
+        problems = validate_chrome_trace(tracer.to_chrome())
+        if problems:
+            raise RuntimeError(f"counter-track export invalid: {problems}")
+    host, hier = reports["host"], reports["hierarchical"]
+    if host.dominant_link != "server:down":
+        raise RuntimeError("host backend on pod_stress must blame "
+                           f"server:down, got {host.dominant_link}")
+    # the transmission collapse behind BENCH_PR9's 3.2x: absolute wire
+    # time falls by >2x AND the network's share of the critical path
+    # falls (the int8 pod drains stop the network being the bottleneck)
+    if not hier.wire_seconds < 0.5 * host.wire_seconds:
+        raise RuntimeError(
+            "hierarchical wire time must collapse vs host "
+            f"({hier.wire_seconds:.3f}s !< 0.5 * {host.wire_seconds:.3f}s)")
+    if not hier.network_share < host.network_share:
+        raise RuntimeError(
+            "hierarchical network share must fall vs host "
+            f"({hier.network_share:.3f} !< {host.network_share:.3f})")
+    if identity_worst > 1e-6:
+        raise RuntimeError(f"phase-sum identity violated: {identity_worst}")
+    cmp = compare_reports(host, hier)
+    write_report(host, "runs/bottleneck_pod_stress.json",
+                 config={"fast": fast, "n_workers": n, "pod_size": pod,
+                         "scenario": "pod_stress", "backend": "host"})
+    print(host.render(), flush=True)
+    dt = time.perf_counter() - t0
+    out["bottleneck_attribution"] = {
+        "n_workers": n, "pod_size": pod, "commit_target": target,
+        "identity_worst_abs_error": identity_worst,
+        "counter_events": counter_events,
+        "host": host.to_results(),
+        "hierarchical": hier.to_results(),
+        "host_vs_hierarchical": cmp,
+        "report_path": "runs/bottleneck_pod_stress.json",
+    }
+    record("bottleneck_attribution", dt,
+           f"host_link={host.dominant_link};"
+           f"wire_s_host={host.wire_seconds:.2f};"
+           f"wire_s_hier={hier.wire_seconds:.2f};"
+           f"net_share_host={host.network_share:.2f};"
+           f"net_share_hier={hier.network_share:.2f};"
+           f"identity_err={identity_worst:.2e}")
+
+
 def bench_trace_artifact(out: dict, path: str = "runs/trace_dynamic_failover.json"):
     """DESIGN.md §10 trace artifact: the paper's dynamic-cluster scenario
     and the §3.3 server-failover scenario, run with a real ``Tracer`` on
@@ -919,6 +1008,7 @@ def main(argv=None) -> None:
         bench_divergence_vs_divmax(pr4)
         bench_lossy_transport(pr8, fast=True)
         bench_switch_aggregation(pr9, fast=True)
+        bench_bottleneck_attribution(obs, fast=True)
         bench_planner_latency_vs_u(obs)
         bench_repair_latency(obs)
         if args.scale:
@@ -940,6 +1030,7 @@ def main(argv=None) -> None:
     bench_divergence_vs_divmax(pr4)
     bench_lossy_transport(pr8)
     bench_switch_aggregation(pr9)
+    bench_bottleneck_attribution(obs)
     bench_incremental_planner()
     bench_sec74_scheduler_scaling()
     bench_roofline_summary()

@@ -166,6 +166,9 @@ class SwitchPlanResult(AggregationResult):
     spilled_uids: frozenset = frozenset()
     spill_count: int = 0
     occupancy_peak: int = 0
+    # uid -> why it took the host path ("no-switch" | "unreachable" |
+    # "pool-exhausted"); feeds the attribution engine's causal span args
+    spill_reasons: Dict[int, str] = field(default_factory=dict)
 
 
 # --------------------------------------------------------------------------- #
@@ -291,10 +294,12 @@ class SwitchBackend(AggregationBackend):
         nw = network.overlay()
         by_pod: Dict[str, List[Update]] = {}
         spilled: List[Update] = []
+        spill_reasons: Dict[int, str] = {}
         for u in order:
             sw = self._live_switch(u.worker, nw)
             if sw is None:
                 spilled.append(u)
+                spill_reasons[u.uid] = "no-switch"
             else:
                 by_pod.setdefault(sw, []).append(u)
 
@@ -312,6 +317,7 @@ class SwitchBackend(AggregationBackend):
                                       max(u.t_avail, t_now))
                 if tr is None:
                     spilled.append(u)
+                    spill_reasons[u.uid] = "unreachable"
                     spill_count += 1
                     continue
                 # tentative drain for the admission check: pod sum so far
@@ -330,6 +336,7 @@ class SwitchBackend(AggregationBackend):
                     drain.profile if drain is not None else None)
                 if occ > cfg.pool_slots and sg.members:
                     spilled.append(u)          # pool exhausted -> host path
+                    spill_reasons[u.uid] = "pool-exhausted"
                     spill_count += 1
                     continue
                 nw.commit_transfer(tr)
@@ -407,6 +414,7 @@ class SwitchBackend(AggregationBackend):
             pseudo_members=pseudo_members,
             spilled_uids=frozenset(u.uid for u in spilled),
             spill_count=spill_count,
+            spill_reasons=spill_reasons,
             occupancy_peak=max((sg.max_occupancy for sg in switch_groups),
                                default=0))
 

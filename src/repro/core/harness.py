@@ -84,6 +84,15 @@ class HookBus:
     def add(self, callback: Any) -> None:
         self.callbacks.append(callback)
 
+    def find(self, attr: str) -> Optional[Any]:
+        """First callback exposing a non-None ``attr`` (marker-attribute
+        discovery — how ``ClusterSim`` locates the critical-path
+        attribution collector, DESIGN.md §14)."""
+        for cb in self.callbacks:
+            if getattr(cb, attr, None) is not None:
+                return cb
+        return None
+
     # ------------------------------------------------------------------ #
     def fire(self, hook: str, source: Any, *args: Any) -> None:
         self.metrics.counter(f"hooks/{hook}").inc()

@@ -495,6 +495,10 @@ class Transfer:
     size: float
     t_avail: float
     profile: Profile
+    # per-segment binding-link attribution ``[(t0, t1, link_label)]``,
+    # populated by :meth:`NetworkState.reserve` only when the state's
+    # ``attribution`` flag is on (DESIGN.md §14); ``None`` otherwise
+    bottlenecks: Optional[List[Tuple[float, float, str]]] = None
 
     @property
     def t_start(self) -> float:
@@ -505,6 +509,44 @@ class Transfer:
         return self.profile.t_end
 
 
+def attribute_profile(profile: Profile, links: Sequence[Timeline],
+                      labels: Sequence[str]) -> List[Tuple[float, float, str]]:
+    """Name the binding link for every segment of a reserved profile.
+
+    The fluid min-walk (:func:`_profile_min2`) breaks chunks at every
+    breakpoint of every path link, so within a chunk each link's residual
+    rate is constant and the chunk rate equals the minimum — the argmin
+    link is the *binding bottleneck* for that segment.  Must be called on
+    the pre-reservation timelines (i.e. before ``commit_transfer``
+    subtracts the profile).  Stall gaps between chunks (some link at zero
+    residual) are attributed to the link with the smaller residual at the
+    gap start.  Consecutive same-label segments are merged; the result
+    covers ``[t_start, t_end]`` contiguously.
+    """
+    if not links or not profile.chunks:
+        return []
+    out: List[Tuple[float, float, str]] = []
+
+    def push(t0: float, t1: float, label: str) -> None:
+        if t1 <= t0:
+            return
+        if out and out[-1][2] == label and out[-1][1] >= t0:
+            out[-1] = (out[-1][0], t1, label)
+        else:
+            out.append((t0, t1, label))
+
+    prev_end: Optional[float] = None
+    for t0, t1, _r in profile.chunks:
+        if prev_end is not None and t0 > prev_end:
+            # stall: at least one link had no residual over the gap
+            rates = [lk.rate_at(prev_end) for lk in links]
+            push(prev_end, t0, labels[rates.index(min(rates))])
+        rates = [lk.rate_at(t0) for lk in links]
+        push(t0, t1, labels[rates.index(min(rates))])
+        prev_end = t1
+    return out
+
+
 class NetworkState:
     """Hosts with independent up/down links and a congestion-free core.
 
@@ -513,6 +555,13 @@ class NetworkState:
     :meth:`overlay` — an O(changes) copy-on-write view — instead of
     :meth:`copy`, which deep-copies every host timeline.
     """
+
+    # when True, ``reserve`` tags each Transfer with per-segment
+    # binding-link attribution (DESIGN.md §14).  Class attribute so
+    # planner overlays and copies inherit the default (off) — only the
+    # simulator's *actual* network opts in, keeping planner look-aheads
+    # and the golden traces untouched.
+    attribution = False
 
     def __init__(self, hosts: Iterable[str], default_bw: float):
         hosts = list(hosts)
@@ -601,6 +650,12 @@ class NetworkState:
         tr = self.plan_transfer(src, dst, size, t_avail)
         if tr is None:
             raise RuntimeError(f"transfer {src}->{dst} of {size}B can never finish")
+        if self.attribution and src != dst:
+            # must run pre-commit: the argmin over residual rates below is
+            # only the binding link while the profile is not yet subtracted
+            tr.bottlenecks = attribute_profile(
+                tr.profile, self.path(src, dst),
+                (f"{src}:up", f"{dst}:down"))
         self.commit_transfer(tr)
         return tr
 

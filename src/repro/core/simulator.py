@@ -45,6 +45,7 @@ import random
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from ..obs.critpath import dominant_bottleneck, find_collector
 from ..obs.metrics import MetricsRegistry
 from .aggregation import AggregationResult
 from .backends import SwitchPlanResult, profile_time_to
@@ -378,6 +379,15 @@ class ClusterSim:
             hosts.append(self.cfg.replica)
         self.net_actual = NetworkState(hosts, default_bw)
         self.net_lagged = NetworkState(hosts, default_bw)
+
+        # critical-path attribution (DESIGN.md §14): when a
+        # CritPathCallback rides the bus, enactment records causal legs
+        # into its collector and the actual network tags reservations
+        # with per-segment binding-link attribution.  The shared no-op
+        # collector keeps the default path identical (golden-pinned).
+        self.crit = find_collector(self.hooks)
+        if self.crit.enabled:
+            self.net_actual.attribution = True
 
         # bounded-loss transport tier (DESIGN.md §12).  ``loss_actual``
         # carries the true link loss rates; ``loss_lagged`` is what the
@@ -791,6 +801,8 @@ class ClusterSim:
                                 list(self.aggregators), t_now=t,
                                 objective="avg_commit",
                                 planner=self.cfg.planner)
+        if self.crit.enabled:
+            self.crit.planned(t, [u.uid for u in order])
         commit = self._enact(agg, t)
         self.result.repairs += 1
         self.trace.instant("repair", cat="scenario", track="scenario", ts=t,
@@ -978,6 +990,7 @@ class ClusterSim:
         self._uid_meta[uid] = {"worker": worker, "version": version}
         self._pending.append(Update(uid=uid, worker=worker, size=size,
                                     version=version, norm=norm, t_avail=t))
+        self.crit.ready(uid, t)
 
     def _on_bw_change(self, t: float) -> None:
         """Paper's N settings: every period, every NIC re-draws its rate."""
@@ -1084,6 +1097,8 @@ class ClusterSim:
                            args={"batch": batch_idx, "updates": len(batch),
                                  "planned": len(plan.order),
                                  "dropped": len(plan.dropped)})
+        if self.crit.enabled:
+            self.crit.planned(t, [g.uid for g in plan.order])
 
         # Enact the plan on the *actual* network: replay the same structure
         # (order, grouping) and take true completion times from it.
@@ -1110,6 +1125,7 @@ class ClusterSim:
             for uid in delayed:
                 if uid in commit_times and commit_times[uid] < t_catchup:
                     commit_times[uid] = t_catchup
+                    self.crit.hold(uid, t_catchup)
 
         for g in plan.order:
             if g.uid not in commit_times:
@@ -1120,6 +1136,22 @@ class ClusterSim:
         self.hooks.on_batch_end(self, batch_idx,
                                 {"t": t, "planned": len(plan.order),
                                  "dropped": len(plan.dropped)})
+
+    def _xargs(self, args: dict, tr: Transfer) -> dict:
+        """Causal/link enrichment of span args (DESIGN.md §14).
+
+        Adds the reservation's transfer id, the path's link ids, and the
+        dominant binding link.  Only with an attribution collector
+        attached — the pinned golden traces never see the extra keys.
+        """
+        if self.crit.enabled:
+            args["xfer"] = tr.uid
+            if tr.src != tr.dst:
+                args["links"] = [f"{tr.src}:up", f"{tr.dst}:down"]
+            bn = dominant_bottleneck(tr)
+            if bn is not None:
+                args["bottleneck"] = bn
+        return args
 
     def _enact(self, agg: AggregationResult, t_now: float) -> Dict[int, float]:
         """Replay the plan's structure on the actual network -> true times.
@@ -1147,11 +1179,13 @@ class ClusterSim:
                     self._inflight[g.uid] = {"update": g, "aggregator": None,
                                              "transfer": tr,
                                              "xmit_chain": chain}
+                    self.crit.principal(g.uid, "direct", tr, t_done, chain)
                     self.trace.span(f"{g.worker}->{server}", cat="transfer",
                                     track=g.worker, ts=tr.t_start,
                                     dur=tr.t_end - tr.t_start,
-                                    args={"uid": g.uid, "bytes": g.size,
-                                          "kind": "direct"})
+                                    args=self._xargs(
+                                        {"uid": g.uid, "bytes": g.size,
+                                         "kind": "direct"}, tr))
                     if ok:
                         commit[g.uid] = t_done
                     else:
@@ -1170,11 +1204,13 @@ class ClusterSim:
                                              "aggregator": grp.aggregator,
                                              "transfer": tr,
                                              "xmit_chain": chain}
+                    self.crit.principal(g.uid, "member", tr, t_done, chain)
                     self.trace.span(f"{g.worker}->{grp.aggregator}",
                                     cat="transfer", track=g.worker,
                                     ts=tr.t_start, dur=tr.t_end - tr.t_start,
-                                    args={"uid": g.uid, "bytes": g.size,
-                                          "kind": "member"})
+                                    args=self._xargs(
+                                        {"uid": g.uid, "bytes": g.size,
+                                         "kind": "member"}, tr))
                     if ok:
                         t_ready = max(t_ready, t_done)
                         agg_size = max(agg_size, g.size)
@@ -1190,6 +1226,7 @@ class ClusterSim:
                     for g in ok_members:
                         self._inflight[g.uid]["agg_transfer"] = tr
                         self._inflight[g.uid]["agg_chain"] = chain
+                        self.crit.hop(g.uid, 1, t_ready, tr, t_done, chain)
                         if ok:
                             commit[g.uid] = t_done
                         else:
@@ -1198,8 +1235,9 @@ class ClusterSim:
                         f"{grp.aggregator}->{server} (x{len(ok_members)})",
                         cat="aggregate", track=grp.aggregator,
                         ts=tr.t_start, dur=tr.t_end - tr.t_start,
-                        args={"members": sorted(g.uid for g in ok_members),
-                              "bytes": agg_size})
+                        args=self._xargs(
+                            {"members": sorted(g.uid for g in ok_members),
+                             "bytes": agg_size}, tr))
         for uid, t_fail in failed:
             self._push_event(t_fail, "transport_fail", uid=uid)
         return commit
@@ -1240,11 +1278,13 @@ class ClusterSim:
                 self._inflight[g.uid] = {"update": g, "aggregator": sg.switch,
                                          "transfer": tr, "xmit_chain": chain,
                                          "wire_size": wsize}
+                self.crit.principal(g.uid, "switch-member", tr, t_done, chain)
                 self.trace.span(f"{g.worker}->{sg.switch}", cat="transfer",
                                 track=g.worker, ts=tr.t_start,
                                 dur=tr.t_end - tr.t_start,
-                                args={"uid": g.uid, "bytes": wsize,
-                                      "kind": "switch-member"})
+                                args=self._xargs(
+                                    {"uid": g.uid, "bytes": wsize,
+                                     "kind": "switch-member"}, tr))
                 if ok:
                     ok_members.append(g)
                     t_ready = max(t_ready, t_done)
@@ -1271,6 +1311,10 @@ class ClusterSim:
                 info = self._inflight[g.uid]
                 info["agg_transfer"] = tr2
                 info["agg_chain"] = chain2
+                # ready=t_ready: commit waits for the slowest member
+                # stream even after the drain lands (final-window clamp)
+                self.crit.hop(g.uid, 1, max(t_first, t_now), tr2, t_done2,
+                              chain2, ready=t_ready)
                 if ok2:
                     commit[g.uid] = max(t_done2, t_ready)
                 else:
@@ -1278,9 +1322,10 @@ class ClusterSim:
             self.trace.span(f"{sg.switch}->{server} (x{len(ok_members)})",
                             cat="switch", track=sg.switch, ts=tr2.t_start,
                             dur=tr2.t_end - tr2.t_start,
-                            args={"members": sorted(g.uid for g in ok_members),
-                                  "bytes": sg.drain_size, "pod": sg.pod,
-                                  "slots": sg.max_occupancy})
+                            args=self._xargs(
+                                {"members": sorted(g.uid for g in ok_members),
+                                 "bytes": sg.drain_size, "pod": sg.pod,
+                                 "slots": sg.max_occupancy}, tr2))
 
         # -- host tier: spilled updates + (hierarchical) pod drains -------- #
         host_plan = agg.host_plan
@@ -1300,11 +1345,16 @@ class ClusterSim:
                     self._inflight[g.uid] = {"update": g, "aggregator": None,
                                              "transfer": tr,
                                              "xmit_chain": chain}
+                    # real uids in a switch plan's host tier are spills
+                    self.crit.principal(g.uid, "spill-direct", tr, t_done,
+                                        chain)
+                    sargs = {"uid": g.uid, "bytes": g.size, "kind": "direct"}
+                    if self.crit.enabled:
+                        sargs["spill"] = agg.spill_reasons.get(g.uid, "spill")
                     self.trace.span(f"{g.worker}->{server}", cat="transfer",
                                     track=g.worker, ts=tr.t_start,
                                     dur=tr.t_end - tr.t_start,
-                                    args={"uid": g.uid, "bytes": g.size,
-                                          "kind": "direct"})
+                                    args=self._xargs(sargs, tr))
                     if ok:
                         commit[g.uid] = t_done
                     else:
@@ -1333,14 +1383,17 @@ class ClusterSim:
                         info["agg_chain"] = chain
                         info["agg_to_server"] = False
                         info["agg_hosts"] = (grp.aggregator,)
+                        self.crit.hop(m.uid, 1, max(st["t_first"], t_now),
+                                      tr, t_done, chain)
                     self.trace.span(
                         f"{sg.switch}->{grp.aggregator} "
                         f"(x{len(st['ok'])})",
                         cat="switch", track=sg.switch, ts=tr.t_start,
                         dur=tr.t_end - tr.t_start,
-                        args={"members": sorted(m.uid for m in st["ok"]),
-                              "bytes": sg.drain_size, "pod": sg.pod,
-                              "slots": sg.max_occupancy})
+                        args=self._xargs(
+                            {"members": sorted(m.uid for m in st["ok"]),
+                             "bytes": sg.drain_size, "pod": sg.pod,
+                             "slots": sg.max_occupancy}, tr))
                     if ok:
                         t_ready = max(t_ready, t_done, st["t_ready"])
                         agg_size = max(agg_size, sg.drain_size)
@@ -1356,11 +1409,14 @@ class ClusterSim:
                 self._inflight[g.uid] = {"update": g,
                                          "aggregator": grp.aggregator,
                                          "transfer": tr, "xmit_chain": chain}
+                self.crit.principal(g.uid, "spill-member", tr, t_done, chain)
+                sargs = {"uid": g.uid, "bytes": g.size, "kind": "member"}
+                if self.crit.enabled:
+                    sargs["spill"] = agg.spill_reasons.get(g.uid, "spill")
                 self.trace.span(f"{g.worker}->{grp.aggregator}",
                                 cat="transfer", track=g.worker,
                                 ts=tr.t_start, dur=tr.t_end - tr.t_start,
-                                args={"uid": g.uid, "bytes": g.size,
-                                      "kind": "member"})
+                                args=self._xargs(sargs, tr))
                 if ok:
                     t_ready = max(t_ready, t_done)
                     agg_size = max(agg_size, g.size)
@@ -1380,6 +1436,7 @@ class ClusterSim:
                 info["agg_transfer"] = tr2
                 info["agg_chain"] = chain2
                 uids.append(g.uid)
+                self.crit.hop(g.uid, 2, t_ready, tr2, t_done2, chain2)
                 if ok2:
                     commit[g.uid] = t_done2
                 else:
@@ -1391,6 +1448,7 @@ class ClusterSim:
                         info["agg2_transfer"] = tr2
                         info["agg2_chain"] = chain2
                     uids.append(m.uid)
+                    self.crit.hop(m.uid, 2, t_ready, tr2, t_done2, chain2)
                     if ok2:
                         commit[m.uid] = t_done2
                     else:
@@ -1398,8 +1456,8 @@ class ClusterSim:
             self.trace.span(f"{grp.aggregator}->{server} (x{len(uids)})",
                             cat="aggregate", track=grp.aggregator,
                             ts=tr2.t_start, dur=tr2.t_end - tr2.t_start,
-                            args={"members": sorted(uids),
-                                  "bytes": agg_size})
+                            args=self._xargs({"members": sorted(uids),
+                                              "bytes": agg_size}, tr2))
 
         for uid, t_fail in failed:
             self._push_event(t_fail, "transport_fail", uid=uid)
@@ -1424,6 +1482,8 @@ class ClusterSim:
             info = self._inflight[m.uid]
             info["agg_transfer"] = tr
             info["agg_chain"] = chain
+            self.crit.hop(m.uid, 1, max(st["t_first"], t_now), tr, t_done,
+                          chain, ready=st["t_ready"])
             if ok:
                 commit[m.uid] = max(t_done, st["t_ready"])
             else:
@@ -1431,9 +1491,10 @@ class ClusterSim:
         self.trace.span(f"{sg.switch}->{server} (x{len(st['ok'])})",
                         cat="switch", track=sg.switch, ts=tr.t_start,
                         dur=tr.t_end - tr.t_start,
-                        args={"members": sorted(m.uid for m in st["ok"]),
-                              "bytes": sg.drain_size, "pod": sg.pod,
-                              "slots": sg.max_occupancy})
+                        args=self._xargs(
+                            {"members": sorted(m.uid for m in st["ok"]),
+                             "bytes": sg.drain_size, "pod": sg.pod,
+                             "slots": sg.max_occupancy}, tr))
 
     def _deliver(self, src: str, dst: str, size: float, t_avail: float, *,
                  uid: Optional[int], kind: str, to_server: bool,
@@ -1512,8 +1573,10 @@ class ClusterSim:
             self.trace.span(f"retry{rounds + 1} {src}->{dst}",
                             cat="transport", track=src, ts=rtr.t_start,
                             dur=rtr.t_end - rtr.t_start,
-                            args={"uid": uid, "kind": kind,
-                                  "bytes": remaining, "backoff": backoff})
+                            args=self._xargs(
+                                {"uid": uid, "kind": kind,
+                                 "bytes": remaining, "backoff": backoff},
+                                rtr))
             d2, c2 = self.loss_actual.transfer_loss(src, dst, rtr.profile)
             if d2 > 0.0:
                 m.counter("transport/bytes_lost").inc(remaining * d2)

@@ -26,6 +26,7 @@ import jax
 from repro.configs import SHAPES, applicable, get_config, get_shape, list_configs
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_step
+from repro.obs.report import roofline_attribution
 
 # TPU v5e hardware constants (roofline targets; DESIGN.md §6)
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
@@ -149,9 +150,12 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                      ) / HBM_BW,
         "t_collective": (la_total if la_total > 0 else coll_total) / ICI_BW,
     }
-    terms = {"compute": result["t_compute"], "memory": result["t_memory"],
-             "collective": result["t_collective"]}
-    result["bottleneck"] = max(terms, key=terms.get)
+    # shared attribution dialect (repro.obs.report): same dominant-term
+    # convention and phase names as the cluster-level BottleneckReport
+    roofline = roofline_attribution(result["t_compute"], result["t_memory"],
+                                    result["t_collective"])
+    result["bottleneck"] = roofline["bottleneck"]
+    result["bottleneck_share"] = roofline["share"]
 
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)

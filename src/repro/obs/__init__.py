@@ -24,6 +24,12 @@ from .profiler import PhaseProfiler, measure_planner_latency
 from .roofline import aggregator_hbm_traffic
 from .bench_schema import (SCHEMA_VERSION, bench_record, git_sha, sanitize,
                            validate_bench_record, write_bench_record)
+from .critpath import (NETWORK_PHASES, NULL_COLLECTOR, PHASES, WIRE_PHASES,
+                       CommitPath, CritPathCallback, CritPathCollector,
+                       dominant_bottleneck, find_collector)
+from .report import (BottleneckReport, build_report, compare_reports,
+                     dominant_term, load_report, render_comparison,
+                     roofline_attribution, write_report)
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "Timer", "MetricsRegistry",
@@ -33,4 +39,11 @@ __all__ = [
     "PhaseProfiler", "measure_planner_latency", "aggregator_hbm_traffic",
     "SCHEMA_VERSION", "bench_record", "git_sha", "sanitize",
     "validate_bench_record", "write_bench_record",
+    "PHASES", "WIRE_PHASES", "NETWORK_PHASES", "CommitPath",
+    "CritPathCollector",
+    "CritPathCallback", "NULL_COLLECTOR", "dominant_bottleneck",
+    "find_collector",
+    "BottleneckReport", "build_report", "compare_reports", "dominant_term",
+    "load_report", "render_comparison", "roofline_attribution",
+    "write_report",
 ]

@@ -65,10 +65,13 @@ class Gauge:
 
 
 class Histogram:
-    """Streaming distribution: count/sum/min/max plus fixed quantile-free
-    moments — cheap enough for per-commit use, rich enough for reports."""
+    """Streaming distribution: count/sum/min/max/moments plus exact
+    quantiles.  Samples are retained (runs observe at most a few thousand
+    values per instrument), so ``quantile`` is exact — numpy's ``linear``
+    interpolation method — rather than sketched."""
 
-    __slots__ = ("name", "count", "total", "sq_total", "min", "max")
+    __slots__ = ("name", "count", "total", "sq_total", "min", "max",
+                 "_samples", "_sorted")
 
     def __init__(self, name: str):
         self.name = name
@@ -77,6 +80,8 @@ class Histogram:
         self.sq_total = 0.0
         self.min = math.inf
         self.max = -math.inf
+        self._samples: List[float] = []
+        self._sorted: Optional[List[float]] = None
 
     def observe(self, value: Number) -> None:
         v = float(value)
@@ -87,6 +92,8 @@ class Histogram:
             self.min = v
         if v > self.max:
             self.max = v
+        self._samples.append(v)
+        self._sorted = None
 
     @property
     def mean(self) -> float:
@@ -99,11 +106,38 @@ class Histogram:
         var = self.sq_total / self.count - self.mean ** 2
         return math.sqrt(max(var, 0.0))
 
+    def quantile(self, q: float) -> float:
+        """Exact ``q``-quantile (numpy ``quantile(..., method="linear")``)."""
+        if not self._samples:
+            return 0.0
+        xs = self._sorted
+        if xs is None:
+            xs = self._sorted = sorted(self._samples)
+        if q <= 0.0:
+            return xs[0]
+        if q >= 1.0:
+            return xs[-1]
+        pos = q * (len(xs) - 1)
+        lo = int(pos)
+        frac = pos - lo
+        if lo + 1 >= len(xs):
+            return xs[lo]
+        return xs[lo] + (xs[lo + 1] - xs[lo]) * frac
+
+    @property
+    def p50(self) -> float:
+        return self.quantile(0.5)
+
+    @property
+    def p99(self) -> float:
+        return self.quantile(0.99)
+
     def snapshot(self) -> Dict[str, float]:
         return {"count": self.count, "mean": self.mean, "std": self.std,
                 "min": self.min if self.count else 0.0,
                 "max": self.max if self.count else 0.0,
-                "total": self.total}
+                "total": self.total,
+                "p50": self.p50, "p99": self.p99}
 
 
 class Timer(Histogram):
@@ -132,9 +166,14 @@ class _NullInstrument:
     min = 0.0
     max = 0.0
     total = 0.0
+    p50 = 0.0
+    p99 = 0.0
 
     def inc(self, amount: Number = 1) -> None:
         pass
+
+    def quantile(self, q: float) -> float:
+        return 0.0
 
     def set(self, value: Number) -> None:
         pass

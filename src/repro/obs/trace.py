@@ -42,6 +42,7 @@ class TraceEvent:
     ts: float
     dur: Optional[float] = None          # None -> instant event
     args: Dict[str, Any] = field(default_factory=dict)
+    counter: bool = False                # True -> Chrome "C" counter sample
 
 
 class Tracer:
@@ -67,6 +68,20 @@ class Tracer:
         """A point event at ``ts`` on ``track``."""
         self.events.append(TraceEvent(name, cat, track, ts, None,
                                       dict(args or {})))
+
+    def counter(self, name: str, *, track: str, ts: float,
+                value: Any, cat: str = "counter") -> None:
+        """A counter sample, exported as a Chrome ``"C"`` event.
+
+        Perfetto renders consecutive samples of one ``name`` as a step
+        function under the spans — the attribution engine uses this for
+        per-link reserved-bandwidth tracks (DESIGN.md §14).  ``value`` is
+        a number or a ``{series: number}`` dict for stacked series.
+        """
+        vals = dict(value) if isinstance(value, dict) else \
+            {"value": float(value)}
+        self.events.append(TraceEvent(name, cat, track, ts, None, vals,
+                                      counter=True))
 
     def clear(self) -> None:
         self.events.clear()
@@ -111,6 +126,16 @@ class Tracer:
         # monotonic file diffs cleanly (the golden-trace test relies on
         # byte-stable output for a seeded run).
         for ev in sorted(self.events, key=lambda e: e.ts):
+            if ev.counter:
+                # counters get a dedicated tid per track, outside the
+                # span sub-lane packing (they are points, not intervals)
+                out.append({
+                    "name": ev.name, "cat": ev.cat,
+                    "ts": round(ev.ts * _US, 3),
+                    "pid": 0, "tid": tid_for(f"{ev.track} [counters]", 0),
+                    "ph": "C", "args": ev.args,
+                })
+                continue
             t_end = None if ev.dur is None else ev.ts + ev.dur
             lane = self._lane_of(ev.track, ev.ts, t_end, lanes)
             rec: Dict[str, Any] = {
@@ -159,6 +184,10 @@ class NullTracer(Tracer):
 
     def instant(self, name: str, *, cat: str, track: str, ts: float,
                 args: Optional[Dict[str, Any]] = None) -> None:
+        pass
+
+    def counter(self, name: str, *, track: str, ts: float,
+                value: Any, cat: str = "counter") -> None:
         pass
 
 

@@ -1,0 +1,416 @@
+"""Critical-path attribution engine tests (DESIGN.md §14).
+
+Covers the full stack: binding-link attribution in the fluid network
+model, the collector's telescoping phase decomposition (property-tested
+to sum exactly to time-to-commit), report building / diffing, the
+counter-track export, and the end-to-end regression on ``pod_stress``
+mirroring the ``bench_bottleneck_attribution`` gate: the host backend
+must blame ``server:down``, and hierarchical aggregation must collapse
+wire time and the network's share of the critical path (the attribution
+view of BENCH_PR9's 3.2x win).
+"""
+
+from types import SimpleNamespace
+
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:      # only the property test needs it
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (C2, N2, ClusterSim, SchedulerConfig, SwitchConfig,
+                        gbps, mb)
+from repro.core.harness import HookBus
+from repro.core.network import (NetworkState, Profile, Timeline,
+                                attribute_profile)
+from repro.obs import (NETWORK_PHASES, NULL_COLLECTOR, PHASES,
+                       BottleneckReport, CommitPath, CritPathCallback,
+                       CritPathCollector, Tracer, build_report,
+                       compare_reports, dominant_bottleneck, find_collector,
+                       render_comparison, validate_chrome_trace)
+from repro.scenarios import pod_stress
+
+
+def fake_transfer(uid, src, dst, t_start, t_end, segments=None,
+                  chunks=None):
+    prof = Profile(list(chunks) if chunks is not None
+                   else [(t_start, t_end, 1.0)])
+    return SimpleNamespace(uid=uid, src=src, dst=dst, profile=prof,
+                           t_start=t_start, t_end=t_end,
+                           bottlenecks=segments)
+
+
+# --------------------------------------------------------------------------- #
+# binding-link attribution in the network model
+# --------------------------------------------------------------------------- #
+class TestAttributeProfile:
+    def test_slower_link_is_binding(self):
+        net = NetworkState(["a", "b"], default_bw=gbps(10))
+        net.set_bandwidth("b", 0.0, down=gbps(2))
+        net.attribution = True
+        tr = net.reserve("a", "b", mb(100), 0.0)
+        assert tr.bottlenecks
+        labels = {lab for _, _, lab in tr.bottlenecks}
+        assert labels == {"b:down"}
+        # contiguous cover of [t_start, t_end]
+        assert tr.bottlenecks[0][0] == pytest.approx(tr.t_start)
+        assert tr.bottlenecks[-1][1] == pytest.approx(tr.t_end)
+
+    def test_binding_link_switches_mid_transfer(self):
+        # a:up chokes from t=1.0 below b:down -> attribution flips
+        net = NetworkState(["a", "b"], default_bw=gbps(10))
+        net.set_bandwidth("b", 0.0, down=gbps(4))
+        net.set_bandwidth("a", 1.0, up=gbps(1))
+        net.attribution = True
+        tr = net.reserve("a", "b", mb(800), 0.0)
+        labels = [lab for _, _, lab in tr.bottlenecks]
+        assert labels == ["b:down", "a:up"]
+        switch = tr.bottlenecks[0][1]
+        assert switch == pytest.approx(1.0)
+        # segments are contiguous and merged (no same-label neighbours)
+        for (_, t1, _), (t0, _, _) in zip(tr.bottlenecks,
+                                          tr.bottlenecks[1:]):
+            assert t0 == pytest.approx(t1)
+
+    def test_stall_gap_blamed_on_starved_link(self):
+        # synthetic profile with a hole; the link at lower residual rate
+        # at the gap start takes the blame
+        prof = Profile([(0.0, 1.0, 5.0), (2.0, 3.0, 5.0)])
+        slow, fast = Timeline(0.0), Timeline(10.0)
+        slow.set_rate_from(2.0, 5.0)  # starved during [1, 2)
+        segs = attribute_profile(prof, [fast, slow], ("fast", "slow"))
+        assert segs[0] == (0.0, 3.0, "slow")  # merged: binding throughout
+        assert segs[-1][1] == 3.0
+
+    def test_empty_inputs(self):
+        assert attribute_profile(Profile([]), [Timeline(1.0)], ("x",)) == []
+        assert attribute_profile(Profile([(0, 1, 1.0)]), [], ()) == []
+
+    def test_attribution_off_by_default(self):
+        net = NetworkState(["a", "b"], default_bw=gbps(10))
+        assert NetworkState.attribution is False
+        tr = net.reserve("a", "b", mb(10), 0.0)
+        assert tr.bottlenecks is None
+
+    def test_overlay_inherits_class_default_not_instance_flag(self):
+        # planner look-aheads must never pay for (or leak) attribution
+        net = NetworkState(["a", "b"], default_bw=gbps(10))
+        net.attribution = True
+        ov = net.overlay()
+        assert ov.attribution is False
+
+    def test_loopback_never_attributed(self):
+        net = NetworkState(["a"], default_bw=gbps(10))
+        net.attribution = True
+        tr = net.reserve("a", "a", mb(10), 0.0)
+        assert tr.bottlenecks is None
+
+
+def test_dominant_bottleneck():
+    assert dominant_bottleneck(SimpleNamespace(bottlenecks=None)) is None
+    tr = SimpleNamespace(bottlenecks=[(0.0, 1.0, "x"), (1.0, 4.0, "y"),
+                                      (4.0, 5.0, "x")])
+    assert dominant_bottleneck(tr) == "y"
+
+
+# --------------------------------------------------------------------------- #
+# collector: telescoping decomposition
+# --------------------------------------------------------------------------- #
+class TestCollector:
+    def test_direct_commit_decomposition(self):
+        c = CritPathCollector()
+        c.ready(1, 0.0)
+        c.planned(0.5, [1])
+        c.principal(1, "direct",
+                    fake_transfer(10, "w0", "server", 0.7, 1.5,
+                                  segments=[(0.7, 1.5, "server:down")]),
+                    t_done=1.5)
+        path = c.commit(SimpleNamespace(uid=1, time=2.0, worker="w0"))
+        ph = path.phases
+        assert ph["queue"] == pytest.approx(0.5)
+        assert ph["xmit_wait"] == pytest.approx(0.2)
+        assert ph["xmit"] == pytest.approx(0.8)
+        assert ph["retransmit"] == 0.0
+        assert ph["apply"] == pytest.approx(0.5)
+        assert path.identity_error() <= 1e-12
+        assert path.dominant_phase == "xmit"
+        assert path.dominant_link == "server:down"
+        assert c.untracked == 0
+
+    def test_hop_and_hold_phases(self):
+        c = CritPathCollector()
+        c.ready(1, 0.0)
+        c.planned(0.1, [1])
+        c.principal(1, "member",
+                    fake_transfer(10, "w1", "agg", 0.2, 1.0), t_done=1.0)
+        c.hop(1, 1, gate=1.4,
+              transfer=fake_transfer(11, "agg", "server", 1.6, 2.0,
+                                     segments=[(1.6, 2.0, "agg:up")]),
+              t_done=2.3)
+        c.hold(1, 2.8)
+        path = c.commit(SimpleNamespace(uid=1, time=3.0))
+        ph = path.phases
+        assert ph["agg_wait"] == pytest.approx(0.4)    # 1.0 -> 1.4
+        assert ph["drain_wait"] == pytest.approx(0.2)  # 1.4 -> 1.6
+        assert ph["drain"] == pytest.approx(0.4)
+        assert ph["retransmit"] == pytest.approx(0.3)  # repair 2.0 -> 2.3
+        assert ph["replication_hold"] == pytest.approx(0.5)
+        assert ph["apply"] == pytest.approx(0.2)
+        assert path.hops == 1
+        assert path.identity_error() <= 1e-12
+        assert path.link_seconds["agg:up"] == pytest.approx(0.4)
+
+    def test_untracked_commit_counted_not_crashed(self):
+        c = CritPathCollector()
+        assert c.commit(SimpleNamespace(uid=99, time=1.0)) is None
+        assert c.untracked == 1
+        assert c.commit(SimpleNamespace()) is None
+        assert c.untracked == 2
+
+    def test_reroute_keeps_original_ready_and_drops_stale_hops(self):
+        c = CritPathCollector()
+        c.ready(1, 0.0)
+        c.ready(1, 5.0)  # re-enactment must not move the path start
+        c.principal(1, "member", fake_transfer(10, "w0", "a0", 0.1, 0.5),
+                    t_done=0.5)
+        c.hop(1, 1, 0.6, fake_transfer(11, "a0", "server", 0.7, 0.9),
+              t_done=0.9)
+        # aggregator died; rerouted direct — stale hop must be dropped
+        c.principal(1, "direct", fake_transfer(12, "w0", "server", 1.0, 2.0),
+                    t_done=2.0)
+        path = c.commit(SimpleNamespace(uid=1, time=2.0))
+        assert path.t_ready == 0.0
+        assert path.hops == 0
+        assert path.phases["drain"] == 0.0
+
+    def test_link_busy_dedupes_shared_aggregate_transfer(self):
+        c = CritPathCollector()
+        tr = fake_transfer(7, "agg", "server", 0.0, 1.0,
+                           chunks=[(0.0, 1.0, 3.0)])
+        for uid in (1, 2, 3):
+            c.ready(uid, 0.0)
+            c.hop(uid, 1, 0.0, tr, t_done=1.0)
+        assert c.link_byte_seconds()["agg:up"] == pytest.approx(3.0)
+
+    def test_link_rate_track_sums_overlaps(self):
+        c = CritPathCollector()
+        c._record_busy(fake_transfer(1, "a", "s", 0.0, 2.0,
+                                     chunks=[(0.0, 2.0, 1.0)]))
+        c._record_busy(fake_transfer(2, "b", "s", 1.0, 3.0,
+                                     chunks=[(1.0, 3.0, 2.0)]))
+        track = dict(c.link_rate_track("s:down"))
+        assert track[0.0] == 1.0
+        assert track[1.0] == 3.0
+        assert track[2.0] == 2.0
+        assert track[3.0] == 0.0
+
+    def test_null_collector_is_inert(self):
+        NULL_COLLECTOR.ready(1, 0.0)
+        NULL_COLLECTOR.principal(1, "direct",
+                                 fake_transfer(1, "a", "b", 0, 1), 1.0)
+        assert NULL_COLLECTOR.commit(SimpleNamespace(uid=1, time=1.0)) is None
+        assert NULL_COLLECTOR.enabled is False
+        assert not NULL_COLLECTOR.paths and not NULL_COLLECTOR.link_busy
+
+
+# identity property: whatever (even causally absurd) timestamps the
+# simulator records, the telescoping walk sums exactly to t_commit-t_ready
+def check_identity(t_ready, t_plan, leg, hops, t_hold, t_commit):
+    c = CritPathCollector()
+    c.ready(1, t_ready)
+    if t_plan is not None:
+        c.planned(t_plan, [1])
+    c.principal(1, "direct", fake_transfer(10, "w", "s", leg[0], leg[1]),
+                t_done=leg[2])
+    for i, (gate, h0, h1, hd, hr) in enumerate(hops):
+        c.hop(1, i + 1, gate, fake_transfer(20 + i, "a", "s", h0, h1),
+              t_done=hd, ready=hr)
+    if t_hold is not None:
+        c.hold(1, t_hold)
+    t_commit = max(t_commit, t_ready)  # commits never precede readiness
+    path = c.commit(SimpleNamespace(uid=1, time=t_commit))
+    assert path is not None
+    assert path.identity_error() <= 1e-6
+    assert all(v >= 0.0 for v in path.phases.values())
+    assert set(path.phases) == set(PHASES)
+
+
+def test_phase_sum_identity_examples():
+    # fixed examples so the identity holds even without hypothesis
+    check_identity(0.0, 0.5, (0.7, 1.5, 1.6), [], None, 2.0)
+    check_identity(1.0, None, (0.0, 0.0, 0.0),
+                   [(0.1, 0.2, 5.0, 5.5, None)], 7.0, 3.0)
+    check_identity(2.0, 1.0, (9.0, 8.0, 7.0),
+                   [(6.0, 5.0, 4.0, 3.0, 2.5)], 0.5, 2.0)
+
+
+if HAVE_HYPOTHESIS:
+    ts = st.floats(min_value=0.0, max_value=100.0,
+                   allow_nan=False, allow_infinity=False)
+
+    @settings(max_examples=200, deadline=None)
+    @given(t_ready=ts, t_plan=st.one_of(st.none(), ts),
+           leg=st.tuples(ts, ts, ts),
+           hops=st.lists(st.tuples(ts, ts, ts, ts,
+                                   st.one_of(st.none(), ts)), max_size=3),
+           t_hold=st.one_of(st.none(), ts), t_commit=ts)
+    def test_phase_sum_identity_property(t_ready, t_plan, leg, hops,
+                                         t_hold, t_commit):
+        check_identity(t_ready, t_plan, leg, hops, t_hold, t_commit)
+
+
+# --------------------------------------------------------------------------- #
+# reports
+# --------------------------------------------------------------------------- #
+def _mk_report(name, phase_seconds, links=(), lat=None):
+    total = sum(phase_seconds.values()) or 1.0
+    return BottleneckReport(
+        name=name, n_commits=10, n_attributed=10,
+        phase_seconds=dict(phase_seconds),
+        phase_share={k: v / total for k, v in phase_seconds.items()},
+        top_links=[{"link": lk, "crit_seconds": s, "gbytes": g}
+                   for lk, s, g in links],
+        latency=dict(lat or {"count": 10.0, "mean": 1.0, "p50": 1.0,
+                             "p99": 2.0, "max": 2.0}))
+
+
+class TestReports:
+    def test_build_report_from_collector(self):
+        c = CritPathCollector()
+        for uid, t0 in ((1, 0.0), (2, 0.5)):
+            c.ready(uid, t0)
+            c.principal(uid, "direct",
+                        fake_transfer(10 + uid, "w", "s", t0 + 0.1, t0 + 1.0,
+                                      segments=[(t0 + 0.1, t0 + 1.0,
+                                                 "s:down")],
+                                      chunks=[(t0 + 0.1, t0 + 1.0, 2.0)]),
+                        t_done=t0 + 1.0)
+            c.commit(SimpleNamespace(uid=uid, time=t0 + 1.2))
+        c.commit(SimpleNamespace(uid=3, time=9.9))  # untracked
+        rep = build_report(c, name="unit")
+        assert rep.n_commits == 3 and rep.n_attributed == 2
+        assert rep.dominant_link == "s:down"
+        assert sum(rep.phase_share.values()) == pytest.approx(1.0)
+        assert rep.latency["count"] == 2.0
+        assert rep.wire_seconds == pytest.approx(1.8)
+        assert "s:down" in rep.render()
+        # serialization round-trip preserves the numbers
+        rt = BottleneckReport.from_results(rep.to_results())
+        assert rt.phase_seconds == rep.phase_seconds
+        assert rt.dominant_link == rep.dominant_link
+
+    def test_compare_reports_flags_regressions(self):
+        a = _mk_report("a", {"xmit": 1.0, "queue": 1.0})
+        b = _mk_report("b", {"xmit": 8.0, "queue": 2.0})
+        cmp = compare_reports(a, b, share_threshold=0.05)
+        assert cmp["regressions"] == ["xmit"]
+        assert cmp["transmission_share_delta"] == pytest.approx(0.3)
+        assert cmp["dominant_phase"] == {"a": "queue", "b": "xmit"}
+        assert "REGRESSION" in render_comparison(cmp)
+        # within-threshold deltas are not flagged
+        assert compare_reports(a, a)["regressions"] == []
+
+
+# --------------------------------------------------------------------------- #
+# harness wiring
+# --------------------------------------------------------------------------- #
+class TestHarnessWiring:
+    def test_hookbus_find(self):
+        cb = CritPathCallback()
+        bus = HookBus([object(), cb])
+        assert bus.find("critpath_collector") is cb
+        assert bus.find("no_such_marker") is None
+        assert HookBus([]).find("critpath_collector") is None
+
+    def test_find_collector(self):
+        cb = CritPathCallback()
+        assert find_collector(HookBus([cb])) is cb.collector
+        assert find_collector(HookBus([])) is NULL_COLLECTOR
+        # duck-typed fallback for buses without .find
+        assert find_collector(SimpleNamespace(callbacks=[cb])) is cb.collector
+        assert find_collector(SimpleNamespace(callbacks=[])) is NULL_COLLECTOR
+
+    def test_sim_without_callback_keeps_attribution_off(self):
+        cfg = SchedulerConfig(server="server", aggregators=[], tau_max=10,
+                              mode="async", batch_interval=0.5)
+        sim = ClusterSim(4, cfg, update_size=mb(10), compute_time=0.05,
+                         seed=3)
+        assert sim.crit is NULL_COLLECTOR
+        assert sim.net_actual.attribution is False
+        sim.run(until_time=2.0)
+        assert sim.net_actual.attribution is False
+
+
+# --------------------------------------------------------------------------- #
+# end-to-end regression: the bench gate, in miniature
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def pod_stress_reports():
+    """host + hierarchical runs on the choked-server preset (the exact
+    --fast config of ``bench_bottleneck_attribution``)."""
+    out = {}
+    for backend in ("host", "hierarchical"):
+        cb = CritPathCallback(name=backend, top_k=3)
+        tracer = Tracer()
+        cfg = SchedulerConfig(server="server",
+                              aggregators=["worker0", "worker1"],
+                              tau_max=100, mode="async", batch_interval=0.5,
+                              backend=backend,
+                              switch=SwitchConfig(pod_size=4))
+        ClusterSim(12, cfg, update_size=mb(100), compute_time=0.05,
+                   straggler=C2, bandwidth=N2, seed=7,
+                   scenario=pod_stress(12, server_down=gbps(2.5)),
+                   hooks=HookBus([cb], tracer=tracer)).run(
+                       until_time=60.0, until_commits=60)
+        out[backend] = (cb, tracer)
+    return out
+
+
+class TestPodStressRegression:
+    def test_host_backend_blames_server_downlink(self, pod_stress_reports):
+        cb, _ = pod_stress_reports["host"]
+        rep = cb.report
+        assert rep.n_attributed > 0
+        assert rep.dominant_link == "server:down"
+        # with the downlink choked, the run is network-bound
+        assert rep.network_share > 0.5
+
+    def test_hierarchical_collapses_wire_time(self, pod_stress_reports):
+        host = pod_stress_reports["host"][0].report
+        hier = pod_stress_reports["hierarchical"][0].report
+        assert hier.wire_seconds < 0.5 * host.wire_seconds
+        assert hier.network_share < host.network_share
+        # the diff engine tells the same story going the other way
+        cmp = compare_reports(hier, host)
+        assert set(cmp["regressions"]) & set(NETWORK_PHASES)
+
+    def test_phase_sums_match_time_to_commit(self, pod_stress_reports):
+        for cb, _ in pod_stress_reports.values():
+            assert cb.collector.paths
+            worst = max(p.identity_error() for p in cb.collector.paths)
+            assert worst <= 1e-6
+
+    def test_counter_tracks_export_validates(self, pod_stress_reports):
+        cb, tracer = pod_stress_reports["host"]
+        counters = [e for e in tracer.events if e.counter]
+        assert counters
+        tracks = {e.track for e in counters}
+        assert "server:down" in tracks
+        assert len(tracks) <= cb.top_k
+        chrome = tracer.to_chrome()
+        assert validate_chrome_trace(chrome) == []
+        c_events = [e for e in chrome["traceEvents"] if e.get("ph") == "C"]
+        assert len(c_events) == len(counters)
+        span_tids = {e["tid"] for e in chrome["traceEvents"]
+                     if e.get("ph") == "X"}
+        assert all(e["tid"] not in span_tids for e in c_events)
+
+    def test_span_args_carry_bottleneck(self, pod_stress_reports):
+        _, tracer = pod_stress_reports["host"]
+        tagged = [e for e in tracer.events
+                  if e.args.get("bottleneck") is not None]
+        assert tagged
+        assert any(e.args["bottleneck"] == "server:down" for e in tagged)

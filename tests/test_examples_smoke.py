@@ -24,6 +24,7 @@ FAST_ARGS = {
     "bounded_replication.py": [],
     "failover.py": [],
     "async_vs_sync.py": ["--quick"],
+    "bottleneck_report.py": ["--quick"],
     "lda_topic_model.py": ["--quick"],
     "lossy_network.py": [],
     "serve_decode.py": ["--batch", "1", "--prompt-len", "8",
